@@ -1,0 +1,34 @@
+import os
+import subprocess
+import sys
+import time
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_subprocess(code: str, n_devices: int = 1, timeout: int = 1800,
+                   extra_env=None) -> str:
+    """Run `code` in a fresh interpreter with n host devices (jax locks the
+    device count at first init, so scaling points need fresh processes —
+    this is also what makes the measurement honest: each point pays full
+    startup, like an MPI job)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.update(extra_env or {})
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    if out.returncode != 0:
+        raise RuntimeError(f"bench subprocess failed:\n{out.stdout}\n"
+                           f"{out.stderr}")
+    return out.stdout
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

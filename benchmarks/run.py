@@ -1,0 +1,62 @@
+"""Benchmark orchestrator: one benchmark per paper table/figure + the
+framework-side LM micro-benchmarks + the roofline report (if dry-run
+results exist).
+
+  python -m benchmarks.run            # full (CPU-sized) suite
+  python -m benchmarks.run --quick    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-scaling", action="store_true",
+                    help="skip the subprocess scaling points")
+    args = ap.parse_args()
+
+    results = {}
+    failures = []
+
+    def section(name, fn):
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            results[name] = fn()
+        except Exception as e:
+            failures.append(name)
+            print(f"[run] {name} FAILED: {e}", flush=True)
+            traceback.print_exc()
+
+    from . import (event_vs_dense, lm_throughput, roofline, scaling,
+                   table1, table2)
+
+    section("table1_sizes_and_rates",
+            lambda: table1.bench(quick=args.quick))
+    section("table2_phase_breakdown",
+            lambda: table2.bench(quick=args.quick))
+    section("event_vs_dense_delivery",
+            lambda: event_vs_dense.bench(quick=args.quick))
+    if not args.skip_scaling:
+        section("fig3_1_strong_scaling",
+                lambda: scaling.strong_scaling(quick=args.quick))
+        section("fig3_2_weak_scaling",
+                lambda: scaling.weak_scaling(quick=args.quick))
+    section("lm_throughput", lambda: lm_throughput.bench(quick=args.quick))
+    section("roofline_report", lambda: roofline.report())
+
+    print("\n===== summary =====")
+    print(json.dumps({k: ("ok" if k in results else "fail")
+                      for k in results}, indent=1))
+    if failures:
+        print(f"FAILURES: {failures}")
+        sys.exit(1)
+    print("all benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Architecture registry: --arch <id> resolution for all assigned configs
+plus the paper's own DPSNN grids."""
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import ModelConfig, MoEConfig, ShapeConfig, SHAPES, shape_by_name
+from . import (gemma3_27b, granite_moe_3b_a800m, internlm2_20b,
+               llama4_maverick_400b_a17b, llava_next_34b, minicpm_2b,
+               qwen3_0_6b, recurrentgemma_2b, rwkv6_1_6b,
+               seamless_m4t_medium)
+
+_MODULES = {
+    "minicpm-2b": minicpm_2b,
+    "internlm2-20b": internlm2_20b,
+    "gemma3-27b": gemma3_27b,
+    "qwen3-0.6b": qwen3_0_6b,
+    "llava-next-34b": llava_next_34b,
+    "recurrentgemma-2b": recurrentgemma_2b,
+    "rwkv6-1.6b": rwkv6_1_6b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+    "granite-moe-3b-a800m": granite_moe_3b_a800m,
+    "llama4-maverick-400b-a17b": llama4_maverick_400b_a17b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {k: m.CONFIG for k, m in _MODULES.items()}
+
+
+def valid_cells():
+    """The (arch x shape) dry-run matrix with applicability skips.
+
+    long_500k runs only for subquadratic archs (SSM / hybrid / 5:1-local);
+    pure full-attention archs skip it (DESIGN.md §Arch-applicability).
+    """
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sh in SHAPES:
+            if sh.name == "long_500k" and not cfg.subquadratic:
+                continue
+            cells.append((arch, sh.name))
+    return cells
+
+
+__all__ = ["ModelConfig", "MoEConfig", "ShapeConfig", "SHAPES",
+           "shape_by_name", "ARCH_IDS", "get_config", "get_smoke_config",
+           "all_configs", "valid_cells"]

@@ -1,0 +1,16 @@
+"""DPSNN-STDP core: distributed simulation of polychronous and plastic
+spiking neural networks (Paolucci et al., 2013), adapted to JAX/TPU."""
+
+from .params import (EngineConfig, GridConfig, IzhikevichParams, StdpParams,
+                     DEFAULT_IZH, DEFAULT_STDP)
+from .engine import (ShardPlan, ShardState, SimSpec, build, init_state,
+                     make_step_fn, run)
+from . import (aer, checkpoint, connectivity, distributed, observables,
+               stimulus, topology)
+
+__all__ = [
+    "EngineConfig", "GridConfig", "IzhikevichParams", "StdpParams",
+    "DEFAULT_IZH", "DEFAULT_STDP", "ShardPlan", "ShardState", "SimSpec",
+    "build", "init_state", "make_step_fn", "run", "aer", "checkpoint",
+    "connectivity", "distributed", "observables", "stimulus", "topology",
+]

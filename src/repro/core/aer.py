@@ -1,0 +1,46 @@
+"""Address Event Representation (AER) spike packing.
+
+Paper: "we send 'axonal spike' messages that carry the identifiers of spiking
+neurons and are packed in groups that have the same spike emission time and
+the same target process".
+
+SPMD adaptation (DESIGN.md §2): messages are fixed-capacity int32 buffers of
+spiking gids, ascending, padded with INVALID; slot 0 of the companion lane is
+the spike count (the paper's single-word counter phase rides inside the same
+buffer instead of a separate rendezvous round-trip).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+INVALID = jnp.int32(2 ** 31 - 1)
+
+
+def pack(spiked: jnp.ndarray, gid: jnp.ndarray, capacity: int
+         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(spiked[N] bool, gid[N]) -> (ids[capacity] ascending, count).
+
+    Padding entries are INVALID (sorted to the tail).  capacity >= N always
+    holds when capacity == N (every neuron can spike at most once per step,
+    the refractory reset guarantees it).
+    """
+    ids = jnp.where(spiked & (gid >= 0), gid.astype(jnp.int32), INVALID)
+    ids = jnp.sort(ids)
+    count = (ids != INVALID).sum(dtype=jnp.int32)
+    return ids[:capacity], count
+
+
+def match_sources(ids: jnp.ndarray, src_gid: jnp.ndarray) -> jnp.ndarray:
+    """Mark which local sources appear in a received AER buffer.
+
+    ids: [C] ascending spike gids (INVALID padded);
+    src_gid: [S] ascending local source table (-1 padded at *front* is not
+    allowed; -1 pads are at arbitrary positions masked by >= 0).
+    Returns [S] bool.
+    """
+    pos = jnp.searchsorted(ids, src_gid.astype(jnp.int32))
+    pos = jnp.clip(pos, 0, ids.shape[0] - 1)
+    hit = ids[pos] == src_gid
+    return hit & (src_gid >= 0)

@@ -1,0 +1,159 @@
+"""Fault-tolerant checkpointing with *elastic resharding* for the SNN engine.
+
+The paper's reproducible-construction property (connectivity is a pure
+function of gids, not of the process layout) means a checkpoint is
+layout-free: we store neuron state keyed by gid and synapse state keyed by
+the canonical (tgt_gid, src_gid, j) triple.  A run checkpointed at H shards
+restores bit-identically at any H' / placement' (tested in
+tests/test_checkpoint.py) — node-count changes on restart are free.
+
+Writes are crash-safe: tmp file + atomic rename; `latest()` finds the newest
+complete checkpoint, so a kill at any point leaves a loadable state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Optional, Tuple
+
+import numpy as np
+
+from . import connectivity, engine, topology
+from .params import EngineConfig, GridConfig
+from .engine import ShardPlan, ShardState, SimSpec
+
+
+def _global_keys(spec: SimSpec, plan: ShardPlan):
+    """Canonical per-synapse key arrays (tgt_gid, src_gid, j), per shard."""
+    gid = np.asarray(plan.gid)            # [H, N]
+    src_gid = np.asarray(plan.src_gid)    # [H, S]
+    H = gid.shape[0]
+    tables = connectivity.build_all_shards(spec.cfg, spec.eng)
+    tgt, src, j, valid = [], [], [], []
+    for h in range(H):
+        t = tables[h]
+        tgt.append(gid[h][t.tgt_local])
+        src.append(src_gid[h][t.src_idx])
+        j.append(t.j)
+        valid.append(t.valid)
+    return (np.stack(tgt), np.stack(src), np.stack(j), np.stack(valid))
+
+
+def save(path: str, spec: SimSpec, plan: ShardPlan, state: ShardState,
+         t: int) -> str:
+    """Write a layout-free checkpoint; returns the final path."""
+    tgt, src, j, valid = _global_keys(spec, plan)
+    m = valid.reshape(-1)
+
+    gid = np.asarray(plan.gid).reshape(-1)
+    nmask = gid >= 0
+    order = np.argsort(gid[nmask], kind="stable")
+
+    def neuron(a):
+        return np.asarray(a).reshape(-1)[nmask][order]
+
+    # synapses in global canonical order (tgt, src, j)
+    key_order = np.lexsort((j.reshape(-1)[m], src.reshape(-1)[m],
+                            tgt.reshape(-1)[m]))
+
+    def syn(a):
+        return np.asarray(a).reshape(-1)[m][key_order]
+
+    D = spec.cfg.n_delay_slots
+    arr = np.asarray(state.arr_ring)               # [H, D, E]
+    arr = np.moveaxis(arr, 1, 0).reshape(D, -1)    # [D, H*E]
+    arr = arr[:, m][:, key_order]
+
+    payload = dict(
+        gid=gid[nmask][order],
+        v=neuron(state.v), u=neuron(state.u),
+        last_post=neuron(state.last_post),
+        tgt=tgt.reshape(-1)[m][key_order], src=src.reshape(-1)[m][key_order],
+        j=j.reshape(-1)[m][key_order],
+        w=syn(state.w), last_arr=syn(state.last_arr), arr_ring=arr,
+        t=np.int64(t))
+    meta = dict(grid_x=spec.cfg.grid_x, grid_y=spec.cfg.grid_y,
+                neurons_per_column=spec.cfg.neurons_per_column,
+                synapses_per_neuron=spec.cfg.synapses_per_neuron,
+                seed=spec.cfg.seed, t=int(t))
+
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez_compressed(f, meta=json.dumps(meta), **payload)
+    os.replace(tmp, path)                          # atomic
+    return path
+
+
+def load(path: str, spec: SimSpec, plan: ShardPlan
+         ) -> Tuple[ShardState, int]:
+    """Restore into an arbitrary (possibly different) layout."""
+    z = np.load(path, allow_pickle=False)
+    meta = json.loads(str(z["meta"]))
+    for k, v in (("grid_x", spec.cfg.grid_x), ("grid_y", spec.cfg.grid_y),
+                 ("neurons_per_column", spec.cfg.neurons_per_column),
+                 ("synapses_per_neuron", spec.cfg.synapses_per_neuron),
+                 ("seed", spec.cfg.seed)):
+        assert meta[k] == v, f"checkpoint {k} mismatch: {meta[k]} != {v}"
+
+    # neurons: direct gid lookup
+    gid = np.asarray(plan.gid)                     # [H, N]
+    ok = gid >= 0
+    safe = np.where(ok, gid, 0)
+    state = engine.init_state(spec, plan)
+
+    def neuron(name, init):
+        a = np.asarray(init).copy()
+        a[ok] = z[name][safe[ok]]
+        return a
+
+    # synapses: locate each local key in the stored canonical order
+    tgt, src, j, valid = _global_keys(spec, plan)
+    H, E = valid.shape
+    stored = (z["tgt"].astype(np.int64), z["src"].astype(np.int64),
+              z["j"].astype(np.int64))
+    # rank local keys among stored keys via lexicographic searchsorted on a
+    # packed key (tgt, src, j are all < 2**21 in any practical run)
+    def pack(t_, s_, j_):
+        return (t_.astype(np.int64) << 42) | (s_.astype(np.int64) << 21) \
+            | j_.astype(np.int64)
+    skey = pack(*stored)                           # ascending by construction
+    lkey = pack(tgt.reshape(-1), src.reshape(-1), j.reshape(-1))
+    pos = np.searchsorted(skey, lkey)
+    m = valid.reshape(-1)
+    pos = np.where(m, np.clip(pos, 0, skey.shape[0] - 1), 0)
+    assert np.array_equal(skey[pos][m], lkey[m]), "synapse key mismatch"
+
+    def syn(name, init):
+        a = np.asarray(init).reshape(-1).copy()
+        a[m] = z[name][pos[m]]
+        return a.reshape(H, E)
+
+    D = spec.cfg.n_delay_slots
+    arr = np.zeros((H * E, D), dtype=bool)
+    arr[m] = z["arr_ring"].T[pos[m]]
+    arr = np.moveaxis(arr.reshape(H, E, D), 2, 1)  # [H, D, E]
+
+    import jax.numpy as jnp
+    new = ShardState(
+        v=jnp.asarray(neuron("v", state.v)),
+        u=jnp.asarray(neuron("u", state.u)),
+        last_post=jnp.asarray(neuron("last_post", state.last_post)),
+        w=jnp.asarray(syn("w", state.w)),
+        last_arr=jnp.asarray(syn("last_arr", state.last_arr)),
+        arr_ring=jnp.asarray(arr))
+    return new, int(z["t"])
+
+
+def latest(directory: str, prefix: str = "ckpt_") -> Optional[str]:
+    """Newest complete checkpoint in `directory` (crash-safe discovery)."""
+    if not os.path.isdir(directory):
+        return None
+    cands = [f for f in os.listdir(directory)
+             if f.startswith(prefix) and f.endswith(".npz")]
+    if not cands:
+        return None
+    step = lambda f: int(f[len(prefix):-4])
+    return os.path.join(directory, max(cands, key=step))

@@ -1,0 +1,145 @@
+"""Distributed DPSNN runtime: the same phase-A/B step as `engine`, but with
+real collectives under `jax.shard_map` over a `cells` mesh axis.
+
+Spike exchange modes (EngineConfig.exchange):
+
+  'allgather' — every shard gathers all shards' spike masks and builds the
+      global mask.  Simple, bandwidth ~ N_total bits/step; the right choice
+      for small meshes and for `scatter` placement (whose halo is global).
+
+  'halo' — the paper's two-phase sparse delivery, TPU-adapted: each shard
+      packs a fixed-capacity AER buffer (ids + count lane, see core.aer) and
+      `lax.ppermute`s it along the *static* set of shard offsets that the
+      connectivity actually uses (discovered at build time, exactly like the
+      paper's first construction step discovers the process subset).
+      Received ids are matched against the local source table; the count
+      lane is a compute-gating hint (processing cost scales with real
+      spikes), while wire bytes are static — the SPMD trade documented in
+      DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import aer, engine, stimulus, topology
+from .engine import ShardPlan, ShardState, SimSpec
+
+
+def halo_offsets(spec: SimSpec, plan: ShardPlan) -> List[int]:
+    """Static shard-to-shard offsets used by the connectivity.
+
+    == the paper's construction-phase discovery of "the subset of processes
+    that should be listened to", derived locally from the source tables.
+    """
+    H = spec.eng.n_shards
+    src_gid = np.asarray(plan.src_gid)            # [H, S]
+    offs = set()
+    for h in range(H):
+        s = src_gid[h]
+        s = s[s >= 0]
+        owners = np.unique(topology.owner_of(spec.cfg, s, H,
+                                             spec.eng.placement))
+        for o in owners.tolist():
+            offs.add((h - o) % H)                 # sender o -> receiver h
+    return sorted(offs)
+
+
+def make_mesh(n_shards: int) -> Mesh:
+    return jax.make_mesh((n_shards,), ("cells",))
+
+
+def _spiked_src_allgather(spec, plan_gid_all, spiked, src_gid):
+    spk_all = jax.lax.all_gather(spiked, "cells")            # [H, N]
+    glob = jnp.zeros((spec.n_total,), bool).at[
+        plan_gid_all.reshape(-1)].max(spk_all.reshape(-1), mode="drop")
+    return glob.at[src_gid].get(mode="fill", fill_value=False) & (src_gid >= 0)
+
+
+def _spiked_src_halo(spec, offsets, plan, spiked):
+    """Sparse AER wire + dense local match.
+
+    Wire: fixed-capacity AER buffers ppermute over the static halo offsets
+    (the paper's two-phase delivery).  Match: received ids are scattered
+    into a local [N_total] mask, then ONE gather by the source table — a
+    per-offset searchsorted match measured 60x more HBM traffic
+    (EXPERIMENTS.md §Perf, SNN iteration C)."""
+    H = spec.eng.n_shards
+    ids, _count = aer.pack(spiked, plan.gid, plan.gid.shape[0])
+    received = []
+    for d in offsets:
+        if d == 0:
+            received.append(ids)
+        else:
+            perm = [(i, (i + d) % H) for i in range(H)]
+            received.append(jax.lax.ppermute(ids, "cells", perm=perm))
+    # single scatter: one functional mask update instead of |offsets|
+    # sequential ones (each re-copied the [N_total] mask: 25 MB/step at
+    # 512 columns — §Perf SNN iteration D)
+    all_ids = jnp.concatenate(received)
+    mask = jnp.zeros((spec.n_total,), bool).at[all_ids].set(
+        True, mode="drop")
+    return mask.at[plan.src_gid].get(mode="fill", fill_value=False) \
+        & (plan.src_gid >= 0)
+
+
+def make_sharded_run(spec: SimSpec, plan: ShardPlan, mesh: Mesh):
+    """Returns run(state, t0, n_steps) -> (state, raster, timings), executing
+    one shard per device of the `cells` mesh axis."""
+    stim_k = stimulus.stim_key(spec.cfg)
+    offsets = halo_offsets(spec, plan) if spec.eng.exchange == "halo" else None
+    gid_all = jnp.asarray(plan.gid)               # replicated [H, N]
+
+    def shard_body(plan_s, state_s, ts):
+        # shard_map passes [1, ...] slices; drop the leading axis.
+        plan_1 = jax.tree.map(lambda x: x[0], plan_s)
+        state_1 = jax.tree.map(lambda x: x[0], state_s)
+
+        def step(state, t):
+            state, spiked, tm = engine.phase_a(spec, plan_1, state, t, stim_k)
+            if spec.eng.exchange == "halo":
+                spiked_src = _spiked_src_halo(spec, offsets, plan_1, spiked)
+            else:
+                spiked_src = _spiked_src_allgather(spec, gid_all, spiked,
+                                                   plan_1.src_gid)
+            state = engine.phase_b(spec, plan_1, state, spiked_src, t)
+            return state, (spiked, tm)
+
+        state_1, (raster, tm) = jax.lax.scan(step, state_1, ts)
+        out_state = jax.tree.map(lambda x: x[None], state_1)
+        return (out_state, raster[:, None],
+                jax.tree.map(lambda x: x[:, None], tm))
+
+    pspec = P("cells")
+    plan_specs = jax.tree.map(lambda _: pspec, plan)
+    state_specs = ShardState(*([pspec] * len(ShardState._fields)))
+    tm_specs = engine.StepTimings(spikes=P(None, "cells"),
+                                  arrivals=P(None, "cells"))
+
+    smapped = jax.shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(plan_specs, state_specs, P()),
+        out_specs=(state_specs, P(None, "cells"), tm_specs),
+        check_vma=False)
+
+    @jax.jit
+    def run(state, ts):
+        return smapped(plan, state, ts)
+
+    def runner(state, t0: int, n_steps: int):
+        ts = jnp.arange(t0, t0 + n_steps, dtype=jnp.int32)
+        state, raster, tm = run(state, ts)
+        return state, raster, tm
+
+    return runner
+
+
+def shard_put(mesh: Mesh, tree):
+    """Place a stacked [H, ...] tree with each shard on its device."""
+    sh = NamedSharding(mesh, P("cells"))
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)

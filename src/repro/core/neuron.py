@@ -1,0 +1,53 @@
+"""Izhikevich neuron dynamics (time-driven part of the simulation).
+
+Canonical Izhikevich (2003) form with two half-steps for the membrane
+equation (as in the published reference implementation the paper follows):
+
+    v' = 0.04 v^2 + 5 v + 140 - u + I      (two dt/2 Euler substeps)
+    u' = a (b v - u)                        (one dt step)
+    if v >= v_peak:  record spike, v <- c, u <- u + d
+
+State is fp32: the reset discontinuity makes the system stiff near
+threshold, and bf16 perturbs spike timings enough to break the paper's
+bit-identical-raster property.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from .params import IzhikevichParams
+
+
+class NeuronState(NamedTuple):
+    v: jnp.ndarray       # [N] fp32 membrane potential (mV)
+    u: jnp.ndarray       # [N] fp32 recovery variable
+
+
+def init_state(exc_mask: jnp.ndarray, p: IzhikevichParams) -> NeuronState:
+    """Paper/Izhikevich init: v = v_init, u = b * v."""
+    v = jnp.full(exc_mask.shape, p.v_init, dtype=jnp.float32)
+    b = jnp.where(exc_mask, p.b_exc, p.b_inh).astype(jnp.float32)
+    return NeuronState(v=v, u=b * v)
+
+
+def step(state: NeuronState, current: jnp.ndarray, exc_mask: jnp.ndarray,
+         p: IzhikevichParams) -> Tuple[NeuronState, jnp.ndarray]:
+    """One dt step.  Returns (new_state, spiked[N] bool)."""
+    v, u = state.v, state.u
+    current = current.astype(jnp.float32)
+    a = jnp.where(exc_mask, p.a_exc, p.a_inh).astype(jnp.float32)
+    b = jnp.where(exc_mask, p.b_exc, p.b_inh).astype(jnp.float32)
+    c = jnp.where(exc_mask, p.c_exc, p.c_inh).astype(jnp.float32)
+    d = jnp.where(exc_mask, p.d_exc, p.d_inh).astype(jnp.float32)
+
+    h = jnp.float32(p.dt / p.v_substeps)
+    for _ in range(p.v_substeps):
+        v = v + h * (0.04 * v * v + 5.0 * v + 140.0 - u + current)
+    u = u + jnp.float32(p.dt) * a * (b * v - u)
+
+    spiked = v >= jnp.float32(p.v_peak)
+    v = jnp.where(spiked, c, v)
+    u = jnp.where(spiked, u + d, u)
+    return NeuronState(v=v, u=u), spiked

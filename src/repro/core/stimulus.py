@@ -1,0 +1,55 @@
+"""Reproducible distributed "thalamic" external stimulus.
+
+Paper: "generate patterns of external thalamic stimulus to the network,
+e.g. prescribing the number of events per ms per neural column", identically
+for any distribution of the network over processes.
+
+Each event k of column c at step t targets neuron
+    n = uniform_hash(seed, c, t, k) mod neurons_per_column
+and injects `stim_amplitude` mV into that neuron's summed current.  The hash
+is jax.random.fold_in (threefry counter mode), so any shard that owns any
+part of column c derives the same events with no communication.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import GridConfig
+
+
+def stim_key(cfg: GridConfig) -> jax.Array:
+    return jax.random.key(cfg.seed ^ 0x57D11)
+
+
+def column_events(cfg: GridConfig, key: jax.Array, columns: jnp.ndarray,
+                  t: jnp.ndarray) -> jnp.ndarray:
+    """Target gids of this step's events for `columns` ([C] int32, pad -1).
+
+    Returns [C, K] int64-compatible int32 gids (garbage rows where col < 0;
+    caller masks by ownership, and col -1 yields negative gids, never owned).
+    """
+    kt = jax.random.fold_in(key, t)
+
+    def one(col):
+        k = jax.random.fold_in(kt, col)
+        n = jax.random.randint(k, (cfg.stim_events_per_ms_per_column,), 0,
+                               cfg.neurons_per_column, dtype=jnp.int32)
+        return col * cfg.neurons_per_column + n
+
+    return jax.vmap(one)(columns)
+
+
+def stim_current(cfg: GridConfig, key: jax.Array, columns: jnp.ndarray,
+                 t: jnp.ndarray, gid_to_local, n_local: int) -> jnp.ndarray:
+    """[n_local] fp32 external current for this shard at step t.
+
+    `gid_to_local(gids) -> (local_idx, owned_mask)` is the shard's ownership
+    map (placement-specific, from the engine plan).
+    """
+    gids = column_events(cfg, key, columns, t).reshape(-1)
+    owned_col = jnp.repeat(columns >= 0, cfg.stim_events_per_ms_per_column)
+    local_idx, owned = gid_to_local(gids)
+    amp = jnp.where(owned & owned_col, jnp.float32(cfg.stim_amplitude), 0.0)
+    return jnp.zeros((n_local,), jnp.float32).at[local_idx].add(amp,
+                                                                mode="drop")

@@ -1,0 +1,75 @@
+"""Sharded, prefetching input pipeline.
+
+Batches are produced host-side (numpy, deterministic per batch_index),
+device_put with the activation sharding, and prefetched one step ahead on a
+background thread so host generation overlaps device compute."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import synthetic
+
+
+class Batcher:
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int,
+                 seed: int = 0, sharding=None, start_index: int = 0):
+        self.cfg, self.batch, self.seq = cfg, batch, seq
+        self.seed = seed
+        self.index = start_index           # restart-safe: index is state
+        self.sharding = sharding
+
+    def make(self, index: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        toks = synthetic.batch_tokens(self.seed, index, self.batch,
+                                      self.seq, cfg.vocab_size)
+        b = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if cfg.modality in ("vlm",):
+            b["embeds"] = synthetic.batch_embeds(self.seed, index,
+                                                 self.batch, self.seq,
+                                                 cfg.d_model)
+        if cfg.family == "encdec":
+            b["enc_embeds"] = synthetic.batch_embeds(
+                self.seed, index, self.batch, max(self.seq // 2, 8),
+                cfg.d_model)
+        return b
+
+    def put(self, b):
+        if self.sharding is None:
+            return jax.tree.map(jax.numpy.asarray, b)
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, s), b,
+            {k: self.sharding.get(k) for k in b} if isinstance(
+                self.sharding, dict) else
+            {k: self.sharding for k in b})
+
+    def __iter__(self) -> Iterator:
+        while True:
+            b = self.put(self.make(self.index))
+            self.index += 1
+            yield b
+
+
+def prefetch(it: Iterator, depth: int = 2) -> Iterator:
+    q: "queue.Queue" = queue.Queue(maxsize=depth)
+    stop = object()
+
+    def worker():
+        try:
+            for x in it:
+                q.put(x)
+        finally:
+            q.put(stop)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        x = q.get()
+        if x is stop:
+            return
+        yield x

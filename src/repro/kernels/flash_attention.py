@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: blockwise (flash) attention forward.
+
+TPU-native design notes (vs the CUDA FlashAttention the idea comes from):
+  - grid = (batch*heads, q_blocks, kv_blocks); TPU executes the grid
+    sequentially per core, so the online-softmax running state (m, l, acc)
+    lives in VMEM scratch carried across the innermost kv_blocks axis.
+  - block shapes default to (128, head_dim) — MXU-aligned (128 lanes).
+  - causal/sliding-window masking is applied per block; fully-masked blocks
+    still iterate (TPU grids are static) but skip the matmuls under
+    `pl.when` — the roofline win of skipping ~half the blocks is claimed by
+    the hillclimb pass, not silently assumed.
+
+Supports: causal or bidirectional, optional sliding window (Gemma-3 /
+RecurrentGemma local layers), optional logit soft-capping (Gemma family),
+GQA via head repetition in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1.0e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window: Optional[int],
+                 softcap: Optional[float], q_offset: int, bq: int, bk: int,
+                 kv_blocks: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    i = pl.program_id(1)
+    # absolute token positions of this q/k block
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + q_offset
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # block-level early-out test (static shapes; compute gated by pl.when)
+    need = True
+    if causal:
+        first_q = i * bq + q_offset
+        need = jnp.asarray(j * bk <= first_q + bq - 1)
+    if window is not None:
+        last_k_needed = None  # window is relative to query position
+        need = jnp.logical_and(
+            need, (j + 1) * bk - 1 >= i * bq + q_offset - (window - 1)) \
+            if causal else need
+
+    @pl.when(jnp.asarray(need))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * jnp.float32(scale)
+        if softcap is not None:
+            s = jnp.float32(softcap) * jnp.tanh(s / jnp.float32(softcap))
+        mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        correction = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_ref[...] = l_ref[...] * correction + p.sum(axis=-1)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * correction[:, None] + pv
+        m_ref[...] = m_cur
+
+    @pl.when(j == kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: [BH, T, D], k/v: [BH, S, D] (same head count; GQA repeat upstream).
+
+    Causal masking aligns the *end* of q to the end of k (decode-style
+    offset q_offset = S - T).
+    """
+    bh, t, d = q.shape
+    s_len = k.shape[1]
+    scale = (d ** -0.5) if scale is None else scale
+    bq = min(block_q, t)
+    bk = min(block_k, s_len)
+    assert t % bq == 0 and s_len % bk == 0, (t, bq, s_len, bk)
+    grid = (bh, t // bq, s_len // bk)
+
+    kern = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, q_offset=s_len - t, bq=bq, bk=bk,
+        kv_blocks=s_len // bk)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=_scratch(bq, d),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(bq, d):
+    from jax.experimental.pallas import tpu as pltpu
+    return [pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32)]

@@ -1,0 +1,135 @@
+"""Public kernel entry points with backend dispatch + shape plumbing.
+
+`use_pallas=None` -> auto: Pallas on TPU, jnp oracle elsewhere.  The
+interpret flag runs the Pallas kernel body in Python on CPU (used by the
+kernel test suite to validate against ref.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import izhikevich as _izh
+from . import ref
+from . import stdp as _stdp
+
+LANES = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(use_pallas: Optional[bool]) -> bool:
+    return _on_tpu() if use_pallas is None else use_pallas
+
+
+def _pad_to_2d(x, rows_mult: int = 8):
+    """[N] -> ([R, 128], unpad_fn) with R a multiple of rows_mult."""
+    n = x.shape[0]
+    r = -(-n // LANES)
+    r = -(-r // rows_mult) * rows_mult
+    pad = r * LANES - n
+    x2 = jnp.pad(x, (0, pad)).reshape(r, LANES)
+    return x2, lambda y: y.reshape(-1)[:n]
+
+
+def izhikevich_update(v, u, current, a, b, c, d, *, v_peak, dt=1.0,
+                      substeps=2, use_pallas: Optional[bool] = None,
+                      interpret: bool = False):
+    """[N] fp32 arrays -> (v', u', spiked)."""
+    if not _resolve(use_pallas) and not interpret:
+        return ref.izhikevich_update(v, u, current, a, b, c, d,
+                                     v_peak=v_peak, dt=dt, substeps=substeps)
+    args, unpads = zip(*[_pad_to_2d(x) for x in (v, u, current, a, b, c, d)])
+    v2, u2, s2 = _izh.izhikevich_update(*args, v_peak=v_peak, dt=dt,
+                                        substeps=substeps,
+                                        interpret=interpret)
+    up = unpads[0]
+    return up(v2), up(u2), up(s2)
+
+
+def stdp_arrival(arr, w, last_post_g, last_arr, plastic, t, *, a_minus,
+                 tau_minus, w_min, w_max, neg_time,
+                 use_pallas: Optional[bool] = None, interpret: bool = False):
+    """[E] arrays + scalar t -> (w', last_arr', contrib)."""
+    if not _resolve(use_pallas) and not interpret:
+        return ref.stdp_arrival(arr, w, last_post_g, last_arr, plastic, t,
+                                a_minus=a_minus, tau_minus=tau_minus,
+                                w_min=w_min, w_max=w_max, neg_time=neg_time)
+    args, unpads = zip(*[_pad_to_2d(x) for x in
+                         (arr, w, last_post_g, last_arr, plastic)])
+    t1 = jnp.asarray(t, jnp.float32).reshape(1)
+    w2, la2, c2 = _stdp.stdp_arrival(*args, t1, a_minus=a_minus,
+                                     tau_minus=tau_minus, w_min=w_min,
+                                     w_max=w_max, neg_time=neg_time,
+                                     interpret=interpret)
+    up = unpads[1]
+    return up(w2), up(la2), up(c2)
+
+
+def stdp_ltp(post_g, w, last_arr, plastic, valid, t, *, a_plus, tau_plus,
+             w_min, w_max, neg_time, use_pallas: Optional[bool] = None,
+             interpret: bool = False):
+    """[E] arrays + scalar t -> w'."""
+    if not _resolve(use_pallas) and not interpret:
+        return ref.stdp_ltp(post_g, w, last_arr, plastic, valid, t,
+                            a_plus=a_plus, tau_plus=tau_plus, w_min=w_min,
+                            w_max=w_max, neg_time=neg_time)
+    args, unpads = zip(*[_pad_to_2d(x) for x in
+                         (post_g, w, last_arr, plastic, valid)])
+    t1 = jnp.asarray(t, jnp.float32).reshape(1)
+    w2 = _stdp.stdp_ltp(*args, t1, a_plus=a_plus, tau_plus=tau_plus,
+                        w_min=w_min, w_max=w_max, neg_time=neg_time,
+                        interpret=interpret)
+    return unpads[1](w2)
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              softcap: Optional[float] = None, scale: Optional[float] = None,
+              block_q: int = 128, block_k: int = 128,
+              use_pallas: Optional[bool] = None, interpret: bool = False):
+    """q [BH,T,D], k/v [BH,S,D].  GQA: repeat kv heads before calling."""
+    if not _resolve(use_pallas) and not interpret:
+        return ref.attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+def rg_lru_scan(a, b, h0, *, use_pallas: Optional[bool] = None,
+                interpret: bool = False):
+    """Linear recurrence h_t = a_t*h_{t-1} + b_t.  a, b: [B,T,D]; h0 [B,D].
+
+    TPU path: sequential VMEM-resident Pallas scan (kernels/rg_lru.py);
+    otherwise the associative-scan oracle."""
+    from . import rg_lru as _rg
+    if h0 is None:
+        h0 = jnp.zeros((a.shape[0], a.shape[2]), a.dtype)
+    if not _resolve(use_pallas) and not interpret:
+        return ref.rg_lru_scan(a, b, h0)
+    B, T, D = a.shape
+    # pad D to the 128-lane boundary; pick dividing blocks for B and T
+    padD = (-D) % LANES
+    if padD:
+        pad3 = ((0, 0), (0, 0), (0, padD))
+        a = jnp.pad(a, pad3)
+        # padded lanes must stay finite: a=0, b=0 -> h=0
+        b = jnp.pad(b, pad3)
+        h0 = jnp.pad(h0, ((0, 0), (0, padD)))
+
+    def div_block(n, target):
+        c = min(target, n)
+        while n % c:
+            c -= 1
+        return c
+
+    out = _rg.rg_lru_scan(a, b, h0, block_b=div_block(B, 8),
+                          block_t=div_block(T, 128),
+                          block_d=LANES, interpret=interpret)
+    return out[..., :D] if padD else out

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are also the CPU-runtime implementations: ops.py dispatches to them
+when `use_pallas=False` (this container) and to the kernels on TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def izhikevich_update(v, u, current, a, b, c, d, *, v_peak: float,
+                      dt: float = 1.0, substeps: int = 2):
+    """Oracle for kernels.izhikevich.  Any shape, fp32."""
+    h = jnp.float32(dt / substeps)
+    for _ in range(substeps):
+        v = v + h * (0.04 * v * v + 5.0 * v + 140.0 - u + current)
+    u = u + jnp.float32(dt) * a * (b * v - u)
+    spiked = v >= jnp.float32(v_peak)
+    v = jnp.where(spiked, c, v)
+    u = jnp.where(spiked, u + d, u)
+    return v, u, spiked
+
+
+def stdp_arrival(arr, w, last_post_g, last_arr, plastic, t, *,
+                 a_minus, tau_minus, w_min, w_max, neg_time):
+    """Oracle for kernels.stdp.stdp_arrival.  Any shape."""
+    tf = jnp.float32(t) if jnp.ndim(t) == 0 else t.reshape(())
+    ltd = jnp.float32(a_minus) * jnp.exp(
+        (last_post_g - tf) / jnp.float32(tau_minus))
+    apply = arr & plastic & (last_post_g > jnp.float32(neg_time / 2))
+    w_out = jnp.where(apply, jnp.clip(w - ltd, w_min, w_max), w)
+    la_out = jnp.where(arr, tf, last_arr)
+    contrib = jnp.where(arr, w, 0.0)
+    return w_out, la_out, contrib
+
+
+def stdp_ltp(post_g, w, last_arr, plastic, valid, t, *,
+             a_plus, tau_plus, w_min, w_max, neg_time):
+    """Oracle for kernels.stdp.stdp_ltp."""
+    tf = jnp.float32(t) if jnp.ndim(t) == 0 else t.reshape(())
+    ltp = jnp.float32(a_plus) * jnp.exp(
+        (last_arr - tf) / jnp.float32(tau_plus))
+    apply = post_g & plastic & valid & (last_arr > jnp.float32(neg_time / 2))
+    return jnp.where(apply, jnp.clip(w + ltp, w_min, w_max), w)
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              softcap: Optional[float] = None, scale: Optional[float] = None):
+    """Oracle for kernels.flash_attention.  q [BH,T,D], k/v [BH,S,D]."""
+    bh, t, d = q.shape
+    s_len = k.shape[1]
+    scale = (d ** -0.5) if scale is None else scale
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(t)[:, None] + (s_len - t)
+    k_pos = jnp.arange(s_len)[None, :]
+    mask = jnp.ones((t, s_len), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None], s, -1.0e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rg_lru_scan(a, b, h0):
+    """Oracle for kernels.rg_lru: h_t = a_t * h_{t-1} + b_t (sequential
+    semantics; implemented with an associative scan)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: RG-LRU linear-recurrence scan.
+
+    h_t = a_t (.) h_{t-1} + b_t          (elementwise over D)
+
+The jnp path uses `jax.lax.associative_scan` (log-depth, 2x memory); on
+TPU the sequential formulation is VMEM-resident: grid = (B tiles, D tiles,
+T chunks) with T innermost — the carry h lives in a VMEM scratch across
+the sequential grid steps, so HBM traffic is exactly read(a,b) + write(h),
+the memory-bound optimum.  Also serves RWKV-ish diagonal recurrences.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, h0_ref, out_ref, carry_ref, *, bt: int,
+            t_chunks: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        carry_ref[...] = h0_ref[...]
+
+    def body(i, h):
+        a = a_ref[:, i, :]
+        b = b_ref[:, i, :]
+        h = a * h + b
+        out_ref[:, i, :] = h
+        return h
+
+    h = jax.lax.fori_loop(0, bt, body, carry_ref[...])
+    carry_ref[...] = h
+
+
+def rg_lru_scan(a, b, h0, *, block_b: int = 8, block_t: int = 128,
+                block_d: int = 128, interpret: bool = False):
+    """a, b: [B, T, D] fp32; h0: [B, D].  Returns h: [B, T, D]."""
+    B, T, D = a.shape
+    bb = min(block_b, B)
+    bt = min(block_t, T)
+    bd = min(block_d, D)
+    assert B % bb == 0 and T % bt == 0 and D % bd == 0, (B, T, D)
+    grid = (B // bb, D // bd, T // bt)
+
+    from jax.experimental.pallas import tpu as pltpu
+    kern = functools.partial(_kernel, bt=bt, t_chunks=T // bt)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bt, bd), lambda i, j, k: (i, k, j)),
+            pl.BlockSpec((bb, bt, bd), lambda i, j, k: (i, k, j)),
+            pl.BlockSpec((bb, bd), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bt, bd), lambda i, j, k: (i, k, j)),
+        out_shape=jax.ShapeDtypeStruct((B, T, D), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, bd), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,361 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", "")).strip()
+
+"""Multi-pod dry run (deliverable e).
+
+For every (architecture x input shape) cell, lower + compile the production
+step on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh, print
+memory_analysis / cost_analysis, and extract per-device collective bytes
+from the optimized HLO for the roofline (EXPERIMENTS.md §Roofline).
+
+The two os.environ lines above run before ANY other import: jax locks the
+device count at first init.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+  python -m repro.launch.dryrun --snn          # the paper's own engine
+Results are appended as JSON lines to results/dryrun/<cell>.json.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, valid_cells
+from repro.dist import sharding as shd
+from repro.launch import input_specs as ispec
+from repro.launch.mesh import make_production_mesh, make_snn_mesh
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "results", "dryrun")
+
+# TPU v5e-ish hardware constants for the roofline terms
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~ per-chip effective)
+
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+                "u64": 8, "c64": 8, "c128": 16}
+
+
+def _shapes_bytes(sig: str) -> int:
+    """Sum bytes over every 'dtype[a,b,c]' token in `sig` (handles tuple
+    results and layout annotations)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_LINE_RE = re.compile(
+    r"=\s+(?P<types>.*?)\s"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device bytes moved through each collective kind, from the
+    optimized (post-SPMD) HLO.  Proxy = result-shape bytes of each
+    collective op ('-done' halves of async pairs are excluded; ring
+    all-reduce moves ~2x its payload on the wire — noted in EXPERIMENTS.md
+    methodology)."""
+    out = {k: 0 for k in _KINDS}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if m:
+            out[m.group("kind")] += _shapes_bytes(m.group("types"))
+    out["total"] = sum(out[k] for k in _KINDS)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    rec = dict(arch=arch, shape=shape_name, multi_pod=multi_pod,
+               chips=n_chips)
+    t0 = time.time()
+    with shd.use_mesh(mesh):
+        fn, args, kind = ispec.cell_specs(arch, shape_name, mesh)
+        lowered = jax.jit(fn).lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = dict(
+        argument_bytes=int(mem.argument_size_in_bytes),
+        output_bytes=int(mem.output_size_in_bytes),
+        temp_bytes=int(mem.temp_size_in_bytes),
+        alias_bytes=int(mem.alias_size_in_bytes),
+        code_bytes=int(mem.generated_code_size_in_bytes))
+    per_device_hbm = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                      + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    rec["memory"]["per_device_total"] = int(per_device_hbm)
+
+    cost = compiled.cost_analysis() or {}
+    rec["xla_cost"] = dict(
+        flops_per_device=float(cost.get("flops", 0.0)),
+        bytes_accessed_per_device=float(cost.get("bytes accessed", 0.0)))
+
+    # trip-count-aware walk of the optimized HLO: XLA's cost_analysis
+    # counts while bodies once; ours multiplies by the recovered trip
+    # counts (launch/hlo_cost.py)
+    from repro.launch import hlo_cost
+    hlo = compiled.as_text()
+    parsed = hlo_cost.analyze(hlo)
+    rec["cost"] = dict(flops_per_device=parsed["flops"],
+                       bytes_accessed_per_device=parsed["bytes"])
+    rec["collectives"] = {k: int(v) for k, v in
+                          parsed["collectives"].items()}
+
+    rec["roofline"] = dict(
+        compute_s=parsed["flops"] / PEAK_FLOPS,
+        memory_s=parsed["bytes"] / HBM_BW,
+        collective_s=parsed["collectives"]["total"] / ICI_BW,
+    )
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=rec["roofline"].get)
+    rec["roofline"]["dominant"] = dom
+    rec["kind"] = kind
+    return rec
+
+
+def run_snn(multi_pod: bool, exchange: str = "halo") -> dict:
+    """Dry-run the paper's own engine at production scale: one neural
+    column per chip (512 columns = 512k neurons, ~102M synapses)."""
+    from repro.core import EngineConfig, GridConfig
+    from repro.core import distributed as D
+    from repro.core import engine as E
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n = mesh.size
+    flat = jax.make_mesh((n,), ("cells",))
+    gx = 32 if multi_pod else 16
+    gy = n // gx
+    cfg = GridConfig(grid_x=gx, grid_y=gy)
+    eng = EngineConfig(n_shards=n, exchange=exchange)
+
+    rec = dict(arch="dpsnn-stdp", shape=f"grid_{gx}x{gy}_{exchange}",
+               multi_pod=multi_pod, chips=n, kind="snn")
+    t0 = time.time()
+    # abstract plan/state: shapes from a single representative shard
+    spec, plan1, state1 = _snn_abstract(cfg, eng)
+    runner_args, lowered = _snn_lower(spec, flat, plan1, state1)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+    mem = compiled.memory_analysis()
+    rec["memory"] = dict(
+        argument_bytes=int(mem.argument_size_in_bytes),
+        temp_bytes=int(mem.temp_size_in_bytes))
+    cost = compiled.cost_analysis() or {}
+    rec["xla_cost"] = dict(flops_per_device=float(cost.get("flops", 0.0)),
+                           bytes_accessed_per_device=float(
+                               cost.get("bytes accessed", 0.0)))
+    from repro.launch import hlo_cost
+    parsed = hlo_cost.analyze(compiled.as_text())
+    n_steps = 100  # the lowered scan length; report per-step terms
+    rec["cost"] = dict(flops_per_device=parsed["flops"] / n_steps,
+                       bytes_accessed_per_device=parsed["bytes"] / n_steps)
+    rec["collectives"] = {k: int(v / n_steps) for k, v in
+                          parsed["collectives"].items()}
+    rec["roofline"] = dict(
+        compute_s=rec["cost"]["flops_per_device"] / PEAK_FLOPS,
+        memory_s=rec["cost"]["bytes_accessed_per_device"] / HBM_BW,
+        collective_s=rec["collectives"]["total"] / ICI_BW)
+    rec["roofline"]["dominant"] = max(
+        ("compute_s", "memory_s", "collective_s"),
+        key=rec["roofline"].get)
+    rec["per_step"] = True
+    return rec
+
+
+def _snn_abstract(cfg, eng):
+    """Build ONE shard to get exact static shapes, then build abstract
+    stacked plan/state (no 512-shard host build)."""
+    import numpy as np
+    from repro.core import connectivity as C
+    from repro.core import engine as E
+
+    one = EngineConfigShard = C.build_shard(cfg, eng, 0)
+    e_cap = C._round_up(int(one.n_valid * 1.08), 128)
+    s_cap = C._round_up(one.src_gid.shape[0], 8)
+    n_cap = -(-cfg.n_neurons // eng.n_shards)
+    H = eng.n_shards
+    D_ = cfg.n_delay_slots
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct((H,) + shape, dtype)
+
+    from repro.core.engine import ShardPlan, ShardState, SimSpec
+    from repro.core.params import DEFAULT_IZH, DEFAULT_STDP
+    c_cap = 1 if cfg.n_columns <= H else -(-cfg.n_columns // H)
+    plan = ShardPlan(
+        src_gid=sds((s_cap,), jnp.int32), syn_src=sds((e_cap,), jnp.int32),
+        syn_tgt=sds((e_cap,), jnp.int32), syn_delay=sds((e_cap,), jnp.int32),
+        syn_plastic=sds((e_cap,), bool), syn_valid=sds((e_cap,), bool),
+        exc_mask=sds((n_cap,), bool), neuron_valid=sds((n_cap,), bool),
+        gid=sds((n_cap,), jnp.int32), columns=sds((c_cap,), jnp.int32),
+        shard_id=sds((), jnp.int32))
+    state = ShardState(
+        v=sds((n_cap,), jnp.float32), u=sds((n_cap,), jnp.float32),
+        last_post=sds((n_cap,), jnp.float32), w=sds((e_cap,), jnp.float32),
+        last_arr=sds((e_cap,), jnp.float32),
+        arr_ring=sds((D_, e_cap), bool))
+    spec = SimSpec(cfg=cfg, eng=eng, izh=DEFAULT_IZH, stdp=DEFAULT_STDP,
+                   n_local=n_cap, e_cap=e_cap, s_cap=s_cap,
+                   n_total=cfg.n_neurons)
+    return spec, plan, state
+
+
+def _snn_lower(spec, mesh, plan_abs, state_abs):
+    from repro.core import distributed as D
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    sh = NamedSharding(mesh, P("cells"))
+    plan_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        plan_abs)
+    state_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        state_abs)
+
+    # mirror make_sharded_run but lower with abstract plan as an ARGUMENT
+    from repro.core import aer, engine, stimulus
+    spec_ = spec
+    stim_k = stimulus.stim_key(spec.cfg)
+    H = spec.eng.n_shards
+    # halo offsets for a regular grid: derived analytically (3-ring halo)
+    offs = _analytic_halo_offsets(spec.cfg, H)
+
+    def shard_body(plan_s, state_s, ts):
+        plan_1 = jax.tree.map(lambda x: x[0], plan_s)
+        state_1 = jax.tree.map(lambda x: x[0], state_s)
+        # loop-invariant: gathered gid table for the allgather exchange
+        gid_all = jax.lax.all_gather(plan_1.gid, "cells") \
+            if spec.eng.exchange == "allgather" else None
+
+        def step(state, t):
+            state, spiked, tm = engine.phase_a(spec_, plan_1, state, t,
+                                               stim_k)
+            if spec.eng.exchange == "halo":
+                spiked_src = D._spiked_src_halo(spec_, offs, plan_1,
+                                                spiked)
+            else:
+                spiked_src = D._spiked_src_allgather(spec_, gid_all,
+                                                     spiked,
+                                                     plan_1.src_gid)
+            state = engine.phase_b(spec_, plan_1, state, spiked_src, t)
+            return state, tm.spikes
+
+        state_1, spikes = jax.lax.scan(step, state_1, ts)
+        return (jax.tree.map(lambda x: x[None], state_1), spikes[:, None])
+
+    from repro.core.engine import ShardState
+    pspec = P("cells")
+    plan_specs = jax.tree.map(lambda _: pspec, plan_abs)
+    state_specs = ShardState(*([pspec] * len(ShardState._fields)))
+    smapped = jax.shard_map(shard_body, mesh=mesh,
+                            in_specs=(plan_specs, state_specs, P()),
+                            out_specs=(state_specs, P(None, "cells")),
+                            check_vma=False)
+    ts = jax.ShapeDtypeStruct((100,), jnp.int32)
+    lowered = jax.jit(smapped).lower(plan_abs, state_abs, ts)
+    return None, lowered
+
+
+def _analytic_halo_offsets(cfg, H):
+    """Static halo offsets for one-column-per-shard regular grids."""
+    offs = set()
+    gx, gy = cfg.grid_x, cfg.grid_y
+    for dy in range(-3, 4):
+        for dx in range(-3, 4):
+            for cy in (0, gy // 2):
+                for cx in (0, gx // 2):
+                    c0 = cy * gx + cx
+                    c1 = ((cy + dy) % gy) * gx + (cx + dx) % gx
+                    offs.add((c0 - c1) % H)
+    return sorted(offs)
+
+
+def save_record(rec: dict):
+    os.makedirs(RESULT_DIR, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__" \
+           f"{'mp' if rec['multi_pod'] else 'sp'}.json"
+    with open(os.path.join(RESULT_DIR, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--snn", action="store_true")
+    ap.add_argument("--snn-exchange", default="halo",
+                    choices=["halo", "allgather"])
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    args = ap.parse_args()
+
+    pods = [False, True]
+    if args.single_pod_only:
+        pods = [False]
+    if args.multi_pod_only:
+        pods = [True]
+
+    cells = []
+    if args.snn:
+        for mp in pods:
+            rec = run_snn(mp, exchange=args.snn_exchange)
+            save_record(rec)
+            print(json.dumps(rec))
+        return
+    if args.all:
+        cells = valid_cells()
+    else:
+        assert args.arch and args.shape, "--arch & --shape, or --all/--snn"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        for mp in pods:
+            tag = f"{arch} x {shape} ({'2x16x16' if mp else '16x16'})"
+            try:
+                rec = run_cell(arch, shape, mp)
+                save_record(rec)
+                r = rec["roofline"]
+                print(f"[dryrun] OK  {tag}: compile {rec['compile_s']}s "
+                      f"mem/dev {rec['memory']['per_device_total']/1e9:.2f}GB "
+                      f"terms c={r['compute_s']:.4f}s m={r['memory_s']:.4f}s "
+                      f"coll={r['collective_s']:.4f}s dom={r['dominant']}",
+                      flush=True)
+            except Exception as e:
+                failures.append(tag)
+                print(f"[dryrun] FAIL {tag}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

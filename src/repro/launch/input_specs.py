@@ -1,0 +1,143 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation: params / optimizer state / caches / batches are all
+abstract, with NamedShardings attached, so `jit(step).lower(**specs)` and
+`.compile()` exercise the full production partitioning on placeholder
+devices."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, shape_by_name
+from ..configs.base import ModelConfig, ShapeConfig
+from ..dist import sharding as shd
+from ..models import lm
+from ..optim import adamw
+from ..train import step as step_mod
+from ..train.train_state import TrainState
+
+
+def _abstract(tree, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings)
+
+
+def abstract_params(cfg: ModelConfig, mesh):
+    shapes = jax.eval_shape(
+        lambda k: lm.init_params(cfg, k), jax.random.key(0))
+    shardings = shd.tree_shardings(shapes, mesh, shd.infer_param_spec)
+    return _abstract(shapes, shardings)
+
+
+def abstract_train_state(cfg: ModelConfig, mesh) -> TrainState:
+    params = abstract_params(cfg, mesh)
+
+    def like_f32(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32,
+                                    sharding=p.sharding)
+
+    m = jax.tree.map(like_f32, params)
+    v = jax.tree.map(like_f32, params)
+    step = jax.ShapeDtypeStruct(
+        (), jnp.int32, sharding=shd.NamedSharding(mesh, shd.P()))
+    return TrainState(params=params,
+                      opt=adamw.AdamWState(step=step, m=m, v=v),
+                      step=step, ef_residual=None)
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig, mesh
+                   ) -> Dict[str, Any]:
+    B, T = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+
+    def tok(name, b, t):
+        out[name] = jax.ShapeDtypeStruct(
+            (b, t), jnp.int32, sharding=shd.NamedSharding(
+                mesh, shd.infer_batch_spec(name, (b, t), mesh)))
+
+    def emb(name, b, t):
+        out[name] = jax.ShapeDtypeStruct(
+            (b, t, cfg.d_model), jnp.bfloat16, sharding=shd.NamedSharding(
+                mesh, shd.infer_batch_spec(name, (b, t, cfg.d_model),
+                                           mesh)))
+
+    if cfg.modality == "vlm":
+        emb("embeds", B, T)
+        tok("tokens", B, T)       # labels path still needs token ids
+    else:
+        tok("tokens", B, T)
+    if cfg.family == "encdec":
+        emb("enc_embeds", B, max(T // 2, 8))
+    tok("labels", B, T)
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, s_max: int, mesh):
+    shapes = jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, batch, s_max))
+    shardings = shd.tree_shardings(shapes, mesh, shd.infer_cache_spec)
+    return _abstract(shapes, shardings)
+
+
+# ---------------------------------------------------------------------------
+# the three step kinds
+# ---------------------------------------------------------------------------
+
+
+def make_train_fn(cfg: ModelConfig, global_batch: int = 256):
+    from ..optim import schedules
+    # wide models accumulate gradients over 4 microbatches: activation
+    # memory scales with the microbatch while the optimizer math is
+    # unchanged (verified vs full-batch in tests/test_substrate.py)
+    micro = global_batch // 4 if (cfg.d_model >= 2304 or cfg.moe
+                                  or cfg.family == "encdec") else None
+    return step_mod.make_train_step(
+        cfg, lr_schedule=schedules.wsd(3e-4, 100, 10_000, 1_000),
+        grad_clip=1.0, microbatch=micro)
+
+
+def make_prefill_fn(cfg: ModelConfig):
+    def prefill(params, cache, batch):
+        """Process the whole prompt, fill caches, return last-token logits
+        (full-sequence logits are never materialized)."""
+        logits, cache = lm.prefill(cfg, params, cache, batch)
+        return logits, cache
+    return prefill
+
+
+def make_decode_fn(cfg: ModelConfig):
+    def decode(params, cache, tokens):
+        return lm.decode_step(cfg, params, cache, tokens)
+    return decode
+
+
+def cell_specs(arch: str, shape_name: str, mesh) -> Tuple[Any, tuple, str]:
+    """Returns (fn, arg_specs, kind) for one dry-run cell."""
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    B, T = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        state = abstract_train_state(cfg, mesh)
+        batch = abstract_batch(cfg, shape, mesh)
+        return make_train_fn(cfg, B), (state, batch), "train"
+
+    if shape.kind == "prefill":
+        params = abstract_params(cfg, mesh)
+        cache = abstract_cache(cfg, B, T, mesh)
+        batch = abstract_batch(cfg, shape, mesh)
+        batch.pop("labels")
+        return make_prefill_fn(cfg), (params, cache, batch), "prefill"
+
+    # decode: one new token against a seq_len-deep cache
+    params = abstract_params(cfg, mesh)
+    cache = abstract_cache(cfg, B, T, mesh)
+    tokens = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32, sharding=shd.NamedSharding(
+            mesh, shd.infer_batch_spec("tokens", (B, 1), mesh)))
+    return make_decode_fn(cfg), (params, cache, tokens), "decode"

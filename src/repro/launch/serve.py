@@ -1,0 +1,45 @@
+"""Serving launcher: batched requests against a (smoke or full) config.
+
+  python -m repro.launch.serve --arch <id> --smoke --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--s-max", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(
+        args.arch)
+    params = lm.init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, batch=args.batch, s_max=args.s_max)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(
+        0, cfg.vocab_size, size=int(rng.integers(4, 24))).astype(np.int32),
+        max_new=args.max_new) for _ in range(args.requests)]
+    t0 = time.time()
+    done = eng.run(reqs)
+    wall = time.time() - t0
+    n = sum(r.out.shape[0] for r in done)
+    print(f"[serve] {len(done)} requests, {n} tokens, {n/wall:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Production training launcher.
+
+  python -m repro.launch.train --arch <id> [--smoke] --steps N
+      [--batch B --seq T] [--ckpt-dir DIR] [--microbatch M]
+      [--compress-grads]
+
+On a real TPU slice this runs under the production mesh with the sharding
+rules bound; on CPU (this container) use --smoke for the reduced config.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import pipeline
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.optim import schedules
+from repro.train import step as step_mod
+from repro.train.train_state import create
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="bind the 16x16 production mesh (TPU slice)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(
+        args.arch)
+    sched = schedules.wsd(args.lr, warmup=min(100, args.steps // 10 + 1),
+                          stable=args.steps, decay=max(args.steps // 10, 1))
+    step = step_mod.make_train_step(cfg, lr_schedule=sched,
+                                    microbatch=args.microbatch,
+                                    compress_grads=args.compress_grads)
+
+    def build_and_run():
+        params = lm.init_params(cfg, jax.random.key(0))
+        print(f"[train] {cfg.name}: {lm.param_count(params)/1e6:.1f}M "
+              f"params")
+        state = create(params, use_error_feedback=args.compress_grads)
+        tr = Trainer(step, state, ckpt_dir=args.ckpt_dir)
+        start = tr.maybe_resume()
+        data = iter(pipeline.prefetch(iter(pipeline.Batcher(
+            cfg, args.batch, args.seq, seed=1, start_index=start))))
+        print(tr.run(data, args.steps - start))
+
+    if args.production_mesh:
+        mesh = make_production_mesh()
+        with shd.use_mesh(mesh):
+            build_and_run()
+    else:
+        build_and_run()
+
+
+if __name__ == "__main__":
+    main()

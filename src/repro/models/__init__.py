@@ -1,0 +1,4 @@
+from . import attention, common, lm, mlp, moe, recurrent, transformer
+
+__all__ = ["attention", "common", "lm", "mlp", "moe", "recurrent",
+           "transformer"]

@@ -1,0 +1,372 @@
+"""GQA attention: grouped heads (no kv repetition), rotary, optional
+qk-norm / sliding window / logit softcap; flash-style chunked computation in
+pure jnp (memory-safe lowering at 32k+), Pallas kernel dispatch on TPU.
+
+Layouts:
+  x          [B, T, d]
+  q          [B, T, H, dh]     ->  grouped [B, Hkv, G, T, dh]
+  k, v       [B, S, Hkv, dh]
+  kv cache   [B, S_max, Hkv, dh] (sequence-shardable for long decode)
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import common
+
+NEG_INF = -1.0e30
+
+
+def init_attn(key, path: str, cfg: ModelConfig, dtype):
+    d, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": common.dense_init(key, path + "/wq", (d, H * dh), dtype),
+        "wk": common.dense_init(key, path + "/wk", (d, Hkv * dh), dtype),
+        "wv": common.dense_init(key, path + "/wv", (d, Hkv * dh), dtype),
+        "wo": common.dense_init(key, path + "/wo", (H * dh, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_gamma"] = jnp.ones((dh,), dtype)
+        p["k_gamma"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+# Block pruning (beyond-paper perf pass, EXPERIMENTS.md §Perf): when True,
+# the chunked path enumerates only the (q_chunk, kv_chunk) pairs that the
+# causal/window mask can reach — ~2x fewer FLOPs for causal, O(T*W) instead
+# of O(T*S) for sliding-window layers.  Baselines in §Perf were taken with
+# this False.
+BLOCK_PRUNE = True
+
+
+def _visible(i, j, cq, ck, q_offset, causal, window):
+    """Can kv chunk j contribute to q chunk i at all?"""
+    q_lo = i * cq + q_offset
+    q_hi = q_lo + cq - 1
+    k_lo = j * ck
+    k_hi = k_lo + ck - 1
+    if causal and k_lo > q_hi:
+        return False
+    # the weakest window constraint in the chunk comes from the earliest
+    # query row: kpos > q_lo - window for some kpos in the kv chunk
+    if window is not None and k_hi <= q_lo - window:
+        return False
+    return True
+
+
+def _chunked_gqa_pruned(q, k, v, *, causal: bool, window: Optional[int],
+                        softcap: Optional[float], scale: float,
+                        q_offset: int, chunk_q: int = 512,
+                        chunk_k: int = 1024):
+    """Flash-style attention over the statically-pruned visible chunk-pair
+    list.  One scan over pairs ordered (i asc, j asc); the running softmax
+    state resets at each new i and the finished q chunk is written into the
+    output carry at its last pair."""
+    b, hkv, g, t, dh = q.shape
+    s = k.shape[1]
+    cq = _pick_chunk(t, chunk_q)
+    ck = _pick_chunk(s, chunk_k)
+    nq, nk = t // cq, s // ck
+    k_ = jnp.transpose(k, (0, 2, 1, 3))           # [B, Hkv, S, dh]
+    v_ = jnp.transpose(v, (0, 2, 1, 3))
+
+    pairs = [(i, j) for i in range(nq) for j in range(nk)
+             if _visible(i, j, cq, ck, q_offset, causal, window)]
+    if not pairs:                                 # degenerate: all masked
+        return jnp.zeros_like(q)
+    ii = jnp.array([p[0] for p in pairs], jnp.int32)
+    jj = jnp.array([p[1] for p in pairs], jnp.int32)
+    first = jnp.array([l == 0 or pairs[l][0] != pairs[l - 1][0]
+                       for l in range(len(pairs))])
+    last = jnp.array([l == len(pairs) - 1
+                      or pairs[l][0] != pairs[l + 1][0]
+                      for l in range(len(pairs))])
+
+    def body(carry, xs):
+        m, l, acc, out = carry
+        i, j, fst, lst = xs
+        m = jnp.where(fst, jnp.full_like(m, NEG_INF), m)
+        l = jnp.where(fst, jnp.zeros_like(l), l)
+        acc = jnp.where(fst, jnp.zeros_like(acc), acc)
+
+        qi = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=3)
+        kj = jax.lax.dynamic_slice_in_dim(k_, j * ck, ck, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(v_, j * ck, ck, axis=2)
+
+        sc = jnp.einsum("bhgqd,bhkd->bhgqk", qi.astype(jnp.float32),
+                        kj.astype(jnp.float32)) * scale
+        if softcap is not None:
+            sc = softcap * jnp.tanh(sc / softcap)
+        qpos = i * cq + jnp.arange(cq)[:, None] + q_offset
+        kpos = j * ck + jnp.arange(ck)[None, :]
+        mask = jnp.ones((cq, ck), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vj.astype(jnp.float32))
+
+        safe = jnp.where(l_new == 0.0, 1.0, l_new)
+        done = (acc_new / safe[..., None]).astype(q.dtype)
+        out = jax.lax.cond(
+            lst,
+            lambda o: jax.lax.dynamic_update_slice_in_dim(
+                o, done, i * cq, axis=3),
+            lambda o: o, out)
+        return (m_new, l_new, acc_new, out), None
+
+    m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, cq, dh), jnp.float32)
+    out0 = jnp.zeros_like(q)
+    (_, _, _, out), _ = jax.lax.scan(body, (m0, l0, a0, out0),
+                                     (ii, jj, first, last))
+    return out
+
+
+def _chunked_gqa(q, k, v, *, causal: bool, window: Optional[int],
+                 softcap: Optional[float], scale: float, q_offset: int,
+                 chunk_q: int = 512, chunk_k: int = 1024):
+    if BLOCK_PRUNE and (causal or window is not None):
+        return _chunked_gqa_pruned(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_offset=q_offset, chunk_q=chunk_q,
+            chunk_k=chunk_k)
+    return _chunked_gqa_dense(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale,
+                              q_offset=q_offset, chunk_q=chunk_q,
+                              chunk_k=chunk_k)
+
+
+def _chunked_gqa_dense(q, k, v, *, causal: bool, window: Optional[int],
+                       softcap: Optional[float], scale: float,
+                       q_offset: int, chunk_q: int = 512,
+                       chunk_k: int = 1024):
+    """Flash-style two-level scan, O(cq*ck) peak score memory.
+
+    q: [B, Hkv, G, T, dh];  k, v: [B, S, Hkv, dh].  Returns like q.
+    """
+    b, hkv, g, t, dh = q.shape
+    s = k.shape[1]
+    cq = _pick_chunk(t, chunk_q)
+    ck = _pick_chunk(s, chunk_k)
+    k_ = jnp.transpose(k, (0, 2, 1, 3))           # [B, Hkv, S, dh]
+    v_ = jnp.transpose(v, (0, 2, 1, 3))           # [B, Hkv, S, dh]
+
+    q_chunks = q.reshape(b, hkv, g, t // cq, cq, dh)
+    q_chunks = jnp.moveaxis(q_chunks, 3, 0)       # [nq, B, Hkv, G, cq, dh]
+    k_chunks = jnp.moveaxis(k_.reshape(b, hkv, s // ck, ck, dh), 2, 0)
+    v_chunks = jnp.moveaxis(v_.reshape(b, hkv, s // ck, ck, dh), 2, 0)
+
+    def q_body(_, qi_i):
+        qi, i = qi_i
+        m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, dh), jnp.float32)
+
+        def kv_body(carry, kvj_j):
+            m, l, acc = carry
+            (kj, vj), j = kvj_j
+            sc = jnp.einsum("bhgqd,bhkd->bhgqk", qi.astype(jnp.float32),
+                            kj.astype(jnp.float32)) * scale
+            if softcap is not None:
+                sc = softcap * jnp.tanh(sc / softcap)
+            qpos = i * cq + jnp.arange(cq)[:, None] + q_offset
+            kpos = j * ck + jnp.arange(ck)[None, :]
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vj.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        js = jnp.arange(s // ck)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
+                                      ((k_chunks, v_chunks), js))
+        safe = jnp.where(l == 0.0, 1.0, l)
+        return None, (acc / safe[..., None]).astype(q.dtype)
+
+    is_ = jnp.arange(t // cq)
+    _, out = jax.lax.scan(q_body, None, (q_chunks, is_))
+    out = jnp.moveaxis(out, 0, 3)                 # [B,Hkv,G,nq,cq,dh]
+    return out.reshape(b, hkv, g, t, dh)
+
+
+def _direct_gqa(q, k, v, *, causal, window, softcap, scale, q_offset):
+    """Small-shape einsum path (decode steps, smoke tests)."""
+    b, hkv, g, t, dh = q.shape
+    s = k.shape[1]
+    sc = jnp.einsum("bhgqd,bshd->bhgqs", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        sc = softcap * jnp.tanh(sc / softcap)
+    qpos = jnp.arange(t)[:, None] + q_offset
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bhgqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
+              window: Optional[int] = None, cache: Optional[Tuple] = None,
+              cache_pos=None, kv_override=None, chunk_q: int = 512,
+              chunk_k: int = 1024):
+    """Full attention block.  Returns (y [B,T,d], new_cache or None).
+
+    cache: (k_cache, v_cache) each [B, S_max, Hkv, dh]; cache_pos: scalar
+    write offset (tokens already in cache).  kv_override: precomputed (k, v)
+    for cross-attention.
+    """
+    B, T, d = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // Hkv
+
+    q = (x @ p["wq"]).reshape(B, T, H, dh)
+    if kv_override is None:
+        k = (x @ p["wk"]).reshape(B, T, Hkv, dh)
+        v = (x @ p["wv"]).reshape(B, T, Hkv, dh)
+    elif isinstance(kv_override, tuple):
+        k, v = kv_override
+    else:
+        # lazy cross-attention source: an object with .enc_out [B,S,d];
+        # K/V are computed with this layer's own projections.
+        enc = kv_override.enc_out
+        S = enc.shape[1]
+        k = (enc @ p["wk"]).reshape(B, S, Hkv, dh)
+        v = (enc @ p["wv"]).reshape(B, S, Hkv, dh)
+
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["q_gamma"], cfg.norm_eps)
+        k = common.rms_norm(k, p["k_gamma"], cfg.norm_eps)
+
+    if kv_override is None:
+        q = common.rope(q, positions, cfg.rope_theta)
+        k = common.rope(k, positions, cfg.rope_theta)
+
+    # ----- KV cache: unified ring buffer -----------------------------------
+    # The cache holds S_r slots; absolute position p lives in slot p % S_r.
+    # For global layers S_r == s_max so slot == p (plain linear cache);
+    # for sliding-window layers S_r == window, so the buffer stores exactly
+    # the live window at O(window) memory — this is what makes long_500k
+    # caches fit (DESIGN.md).
+    new_cache = None
+    attend_from_cache = False
+    if cache is not None:
+        kc, vc = cache
+        S_r = kc.shape[1]
+        pw = cache_pos + jnp.arange(min(T, S_r))
+        if T > S_r:                     # only the last S_r tokens survive
+            k_w, v_w = k[:, -S_r:], v[:, -S_r:]
+            pw = cache_pos + T - S_r + jnp.arange(S_r)
+        else:
+            k_w, v_w = k, v
+        slots = jnp.mod(pw, S_r)
+        kc = kc.at[:, slots].set(k_w.astype(kc.dtype))
+        vc = vc.at[:, slots].set(v_w.astype(vc.dtype))
+        new_cache = (kc, vc)
+        if T == 1:
+            attend_from_cache = True    # decode: read the ring
+        # prefill (T > 1): attend over the fresh k/v below (assumes the
+        # prompt starts at cache_pos == 0, which all serving paths satisfy)
+
+    qg = jnp.transpose(q.reshape(B, T, Hkv, G, dh), (0, 2, 3, 1, 4))
+    scale = dh ** -0.5
+
+    if attend_from_cache:
+        kc, vc = new_cache
+        S_r = kc.shape[1]
+        qpos = cache_pos + jnp.arange(T)
+        last = cache_pos + T - 1
+        slot_i = jnp.arange(S_r)
+        # most recent absolute position stored in slot i
+        kpos = last - jnp.mod(last - slot_i, S_r)
+        out = _decode_gqa(qg, kc, vc, causal=causal, window=window,
+                          softcap=cfg.softcap, scale=scale, qpos=qpos,
+                          kpos=kpos)
+    else:
+        s_len = k.shape[1]
+        if cache is not None:
+            # prefill always starts at position 0 (documented serving-path
+            # invariant); a static offset keeps block pruning static
+            q_offset = 0
+        elif kv_override is not None:
+            causal = False
+            q_offset = 0
+        else:
+            q_offset = s_len - T
+        big = (T * s_len) > (1024 * 2048)
+        if big:
+            # flash-style backward: recompute the blockwise attention in
+            # the bwd pass instead of saving per-chunk softmax state —
+            # without this, AD through the nested scans stores
+            # O(T/cq * S/ck) running accumulators (measured 96-212 GB/dev
+            # on the 32k cells; see EXPERIMENTS.md §Perf iteration 1).
+            import functools as _ft
+            chunked = jax.checkpoint(_ft.partial(
+                _chunked_gqa, causal=causal, window=window,
+                softcap=cfg.softcap, scale=scale, q_offset=q_offset,
+                chunk_q=chunk_q, chunk_k=chunk_k))
+            out = chunked(qg, k, v)
+        else:
+            out = _direct_gqa(qg, k, v, causal=causal, window=window,
+                              softcap=cfg.softcap, scale=scale,
+                              q_offset=q_offset)
+
+    y = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, T, H * dh)
+    return (y @ p["wo"]), new_cache
+
+
+def _decode_gqa(q, k, v, *, causal, window, softcap, scale, qpos, kpos):
+    """Cache read with explicit absolute position arrays (ring-aware).
+
+    qpos: [T] absolute query positions; kpos: [S] absolute position stored
+    in each cache slot (negative/stale slots masked by the causal+window
+    conditions)."""
+    b, hkv, g, t, dh = q.shape
+    s = k.shape[1]
+    sc = jnp.einsum("bhgqd,bshd->bhgqs", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        sc = softcap * jnp.tanh(sc / softcap)
+    qp = qpos[:, None]
+    kp = kpos[None, :]
+    mask = (kp <= qp) if causal else jnp.ones((t, s), bool)
+    mask &= kp >= 0
+    if window is not None:
+        mask &= kp > qp - window
+    sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bhgqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

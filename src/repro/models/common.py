@@ -1,0 +1,103 @@
+"""Shared model building blocks: reproducible init, norms, rotary, acts.
+
+Init mirrors the paper's reproducible-construction idea: every parameter is
+generated from fold_in(key, path-hash) — a pure function of the parameter
+name, independent of mesh layout or device count, so any shard can
+materialize exactly its slice (and re-materialize it after elastic events).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def path_key(key: jax.Array, path: str) -> jax.Array:
+    h = int.from_bytes(hashlib.sha256(path.encode()).digest()[:4], "little")
+    return jax.random.fold_in(key, h)
+
+
+def dense_init(key: jax.Array, path: str, shape: Sequence[int],
+               dtype=jnp.bfloat16, scale: Optional[float] = None,
+               fan_in_axis: int = -2) -> jnp.ndarray:
+    """Truncated-normal fan-in init (1/sqrt(fan_in))."""
+    fan_in = shape[fan_in_axis] if len(shape) > 1 else shape[0]
+    std = (scale if scale is not None else 1.0) / (fan_in ** 0.5)
+    w = jax.random.truncated_normal(path_key(key, path), -3.0, 3.0, shape,
+                                    jnp.float32) * std
+    return w.astype(dtype)
+
+
+def embed_init(key: jax.Array, path: str, shape, dtype=jnp.bfloat16):
+    """N(0, 1/d): with tied unembedding and an RMS-normed final stream the
+    init logits are O(1), so the init loss is ~ln(V) as it should be."""
+    std = shape[-1] ** -0.5
+    w = jax.random.normal(path_key(key, path), shape, jnp.float32) * std
+    return w.astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    """RMSNorm in fp32, cast back to x.dtype (gemma uses (1+gamma))."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps)
+    g = gamma.astype(jnp.float32)
+    if plus_one:
+        g = g + 1.0
+    return (xn * g).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    xn = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xn * gamma.astype(jnp.float32)
+            + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding.  x: [..., T, H, D]; positions: [..., T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq  # [...,T,1,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def activate(x: jnp.ndarray, gate: Optional[jnp.ndarray], kind: str
+             ) -> jnp.ndarray:
+    if kind == "swiglu":
+        assert gate is not None
+        return jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * x
+    if kind == "gelu":
+        y = jax.nn.gelu(x.astype(jnp.float32), approximate=True)
+        return (y.astype(x.dtype) * gate) if gate is not None \
+            else y.astype(x.dtype)
+    if kind == "relu2":
+        y = jnp.square(jax.nn.relu(x.astype(jnp.float32)))
+        return y.astype(x.dtype)
+    raise ValueError(kind)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 ignore_id: int = -100):
+    """Token-mean cross entropy in fp32; returns (loss, n_tokens)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = labels != ignore_id
+    nll = (lse - ll) * mask
+    n = jnp.maximum(mask.sum(), 1)
+    return nll.sum() / n, n

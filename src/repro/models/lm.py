@@ -1,0 +1,211 @@
+"""Top-level language model: embeddings -> stack -> logits; train loss,
+prefill and decode entry points; enc-dec (seamless) and embedding-input
+(VLM/audio frontend stub) variants.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import shard
+from . import attention, common, transformer
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    p: Dict[str, Any] = {
+        "embed": common.embed_init(key, "embed",
+                                   (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "stack": transformer.init_stack(key, "stack", cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = common.dense_init(key, "unembed",
+                                         (cfg.d_model, cfg.vocab_size),
+                                         dtype)
+    if cfg.family == "encdec":
+        enc_cfg = encoder_view(cfg)
+        p["enc_stack"] = transformer.init_stack(key, "enc", enc_cfg, dtype)
+        p["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return p
+
+
+def encoder_view(cfg: ModelConfig) -> ModelConfig:
+    """The encoder half of an enc-dec config (bidirectional layers)."""
+    return cfg.scaled(n_layers=cfg.n_encoder_layers,
+                      pattern=(("bi", "dense"),), family="decoder")
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens) -> jnp.ndarray:
+    x = params["embed"][tokens] * jnp.asarray(cfg.emb_scale,
+                                              _dtype(cfg))
+    return shard(x, "batch", None, None)
+
+
+def unembed(cfg: ModelConfig, params, x) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["unembed"]
+    return logits * cfg.logit_scale
+
+
+def encode(cfg: ModelConfig, params, enc_embeds) -> jnp.ndarray:
+    """Run the (bidirectional) encoder over frontend embeddings."""
+    enc_cfg = encoder_view(cfg)
+    pos = jnp.arange(enc_embeds.shape[1])
+    h, _, _ = transformer.apply_stack(enc_cfg, params["enc_stack"],
+                                      enc_embeds.astype(_dtype(cfg)), pos)
+    return common.rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def hidden_states(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray]
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Embed -> stack -> final norm.  Returns (x [B,T,d], aux_loss)."""
+    if "embeds" in batch and cfg.family != "encdec":
+        x = shard(batch["embeds"].astype(_dtype(cfg)), "batch", None, None)
+    else:
+        x = embed_tokens(cfg, params, batch["tokens"])
+    T = x.shape[1]
+    pos = jnp.arange(T)
+
+    enc_kv = None
+    if cfg.family == "encdec":
+        enc_out = encode(cfg, params, batch["enc_embeds"])
+        enc_kv = enc_out  # per-layer kv computed lazily below
+
+    x, _, aux = transformer.apply_stack(
+        cfg, params["stack"], x, pos,
+        enc_kv=_EncOut(enc_kv) if enc_kv is not None else None)
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training/prefill forward.  Returns (logits, aux_loss).
+
+    batch keys: 'tokens' [B,T] (text) or 'embeds' [B,T,d] (vlm/audio stub);
+    encdec additionally 'enc_embeds' [B,S,d].
+    """
+    x, aux = hidden_states(cfg, params, batch)
+    return unembed(cfg, params, x), aux
+
+
+class _EncOut:
+    """Lazy cross-attention source understood by attention.attention:
+    K/V are computed from .enc_out with each layer's own projections
+    (avoids materializing every layer's cross K/V at once under scan)."""
+
+    def __init__(self, enc_out):
+        self.enc_out = enc_out
+
+
+def loss_fn(cfg: ModelConfig, params, batch, aux_weight: float = 0.01,
+            xent_chunk: int = 512):
+    """Sequence-chunked cross entropy: the [B, T, V] fp32 logits tensor is
+    never materialized (at gemma3's 262k vocab it is ~4.3 GB/device at 4k x
+    bs16 even sharded); each T-chunk's logits are computed, reduced, and
+    rematerialized in the backward pass (EXPERIMENTS.md §Perf)."""
+    x, aux = hidden_states(cfg, params, batch)
+    labels = batch["labels"]
+    B, T, d = x.shape
+    c = min(xent_chunk, T)
+    while T % c:
+        c -= 1
+
+    def chunk_nll(h_c, y_c):
+        logits = unembed(cfg, params, h_c).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(y_c, 0)[..., None], axis=-1)[..., 0]
+        mask = y_c != -100
+        return ((lse - ll) * mask).sum(), mask.sum()
+
+    chunk_nll = jax.checkpoint(chunk_nll)
+
+    if c == T:
+        nll, n = chunk_nll(x, labels)
+    else:
+        xs = (jnp.moveaxis(x.reshape(B, T // c, c, d), 1, 0),
+              jnp.moveaxis(labels.reshape(B, T // c, c), 1, 0))
+
+        def body(carry, xc):
+            s, n = carry
+            ds, dn = chunk_nll(*xc)
+            return (s + ds, n + dn), None
+
+        (nll, n), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), jnp.int32(0)), xs)
+
+    loss = nll / jnp.maximum(n, 1)
+    return loss + aux_weight * aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               enc_out: Optional[jnp.ndarray] = None):
+    caches = transformer.init_caches(cfg, batch, s_max, _dtype(cfg))
+    return {"layers": caches, "enc_out": enc_out,
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(cfg: ModelConfig, params, cache, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Any]:
+    """Process a whole prompt from cache['pos']==0: fill the caches and
+    return ONLY the last position's logits [B, V] (the full [B, T, V]
+    logits tensor is never materialized — at 32k x 262k vocab it wouldn't
+    fit anything)."""
+    if "embeds" in batch and cfg.family != "encdec":
+        x = shard(batch["embeds"].astype(_dtype(cfg)), "batch", None, None)
+    else:
+        x = embed_tokens(cfg, params, batch["tokens"])
+    T = x.shape[1]
+    enc_out = cache.get("enc_out")
+    if cfg.family == "encdec" and "enc_embeds" in batch:
+        enc_out = encode(cfg, params, batch["enc_embeds"])
+    enc_kv = _EncOut(enc_out) if enc_out is not None else None
+    pos = cache["pos"] + jnp.arange(T)
+    x, new_layers, _ = transformer.apply_stack(
+        cfg, params["stack"], x, pos, caches=cache["layers"],
+        cache_pos=cache["pos"], enc_kv=enc_kv)
+    xl = common.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, xl)[:, 0]
+    new_cache = {"layers": new_layers, "enc_out": enc_out,
+                 "pos": cache["pos"] + T}
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Any]:
+    """One decode step: tokens [B, Tq] (Tq=1 usually).
+
+    Positions/cache offset come from cache['pos'].
+    """
+    x = embed_tokens(cfg, params, tokens)
+    pos = cache["pos"] + jnp.arange(tokens.shape[1])
+    enc_kv = _EncOut(cache["enc_out"]) if cache.get("enc_out") is not None \
+        else None
+    x, new_layer_caches, _ = transformer.apply_stack(
+        cfg, params["stack"], x, pos, caches=cache["layers"],
+        cache_pos=cache["pos"], enc_kv=enc_kv)
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x)
+    new_cache = {"layers": new_layer_caches, "enc_out": cache.get("enc_out"),
+                 "pos": cache["pos"] + tokens.shape[1]}
+    return logits, new_cache
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

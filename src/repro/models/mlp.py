@@ -1,0 +1,30 @@
+"""Dense MLP blocks (SwiGLU / GELU / squared-ReLU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import common
+
+
+def init_mlp(key, path: str, d_model: int, d_ff: int, act: str, dtype):
+    p = {
+        "w_in": common.dense_init(key, path + "/w_in", (d_model, d_ff),
+                                  dtype),
+        "w_out": common.dense_init(key, path + "/w_out", (d_ff, d_model),
+                                   dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = common.dense_init(key, path + "/w_gate",
+                                        (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(p, x, act: str):
+    h = x @ p["w_in"]
+    gate = (x @ p["w_gate"]) if "w_gate" in p else None
+    if act == "swiglu":
+        h = common.activate(h, gate, "swiglu")
+    else:
+        h = common.activate(h, gate, act)
+    return h @ p["w_out"]

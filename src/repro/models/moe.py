@@ -1,0 +1,159 @@
+"""Mixture-of-Experts layer with two-phase, capacity-bounded dispatch.
+
+The dispatch deliberately mirrors the paper's AER spike delivery (DESIGN.md
+§Arch-applicability): routing produces a sparse, data-dependent
+communication pattern; we exchange *counts* implicitly via a static-capacity
+buffer per expert (the SPMD analogue of the spike-counter phase) and move
+only payload tokens (gather), never one-hot matmuls — so dispatch costs
+bytes, not FLOPs, and `cost_analysis` reflects the true active compute
+(6·N_active·D).
+
+Experts are sharded over the `model` ('expert-parallel') mesh axis; token
+gather/scatter across shards lowers to all-to-all-like collectives under
+GSPMD, again matching the paper's two-step MPI_Alltoallv structure.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig
+from ..dist.sharding import axis_size, shard
+from . import common
+
+
+def init_moe(key, path: str, d_model: int, mcfg: MoEConfig, act: str, dtype):
+    E, f = mcfg.n_experts, mcfg.d_ff_expert
+    p = {
+        "router": common.dense_init(key, path + "/router", (d_model, E),
+                                    jnp.float32),
+        "w_in": common.dense_init(key, path + "/w_in", (E, d_model, f),
+                                  dtype),
+        "w_out": common.dense_init(key, path + "/w_out", (E, f, d_model),
+                                   dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = common.dense_init(key, path + "/w_gate",
+                                        (E, d_model, f), dtype)
+    if mcfg.shared_expert:
+        p["s_in"] = common.dense_init(key, path + "/s_in", (d_model, f),
+                                      dtype)
+        p["s_out"] = common.dense_init(key, path + "/s_out", (f, d_model),
+                                       dtype)
+        if act == "swiglu":
+            p["s_gate"] = common.dense_init(key, path + "/s_gate",
+                                            (d_model, f), dtype)
+    return p
+
+
+def _expert_ffn(p, x_e, act: str):
+    """x_e: [E, C, d] -> [E, C, d], per-expert weights."""
+    h = jnp.einsum("ecd,edf->ecf", x_e, p["w_in"])
+    if "w_gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", x_e, p["w_gate"])
+        h = common.activate(h, g, "swiglu")
+    else:
+        h = common.activate(h, None, "gelu")
+    return jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+
+
+def _row_dispatch(xr, idx, E: int, C: int, K: int):
+    """Per-batch-row dispatch (runs under vmap; B rows stay data-local).
+
+    xr [T, d]; idx [T, K].  Sort-by-expert = the paper's counter phase;
+    capacity slots = the fixed AER buffer; overflow drops like AER
+    saturation."""
+    T, d = xr.shape
+    flat_e = idx.reshape(-1)                                 # [T*K]
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    rank = jnp.arange(T * K) - seg_start[sorted_e]
+    keep = rank < C
+    slot = jnp.where(keep, sorted_e * C + rank, E * C)
+    token_of = (order // K).astype(jnp.int32)
+    table = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(
+        token_of, mode="drop")[:E * C]
+    tok_valid = table < T
+    x_e = jnp.take(xr, jnp.minimum(table, T - 1), axis=0)
+    x_e = jnp.where(tok_valid[:, None], x_e, 0).reshape(E, C, d)
+    return x_e, (order, sorted_e, rank, keep, token_of)
+
+
+def _row_combine(y_e, gates, dispatch, T: int, C: int, dtype):
+    order, sorted_e, rank, keep, token_of = dispatch
+    gate_of = gates.reshape(-1)[order]
+    gate_slot = jnp.where(keep, gate_of, 0.0)
+    y_flat = y_e.reshape(-1, y_e.shape[-1])
+    contrib = y_flat[jnp.where(keep, sorted_e * C + rank, 0)] \
+        * gate_slot[:, None].astype(y_flat.dtype)
+    return jnp.zeros((T, y_e.shape[-1]), dtype).at[token_of].add(
+        contrib.astype(dtype), mode="drop")
+
+
+def moe(p, x, mcfg: MoEConfig, act: str, *, router_key=None
+        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, T, d] -> (y, aux_loss).
+
+    Routing/dispatch are vmapped PER BATCH ROW, so token gather/scatter
+    never crosses the data shards (the global-dispatch formulation moved
+    ~N*K*d bytes through per-layer all-gathers — 21 TB/device/step for
+    granite; EXPERIMENTS.md §Perf).  Cross-shard movement happens only via
+    the x_e sharding constraint: when E divides the 'experts' axis this is
+    the canonical EP all-to-all; otherwise expert compute stays data-local
+    (per-expert weights are small when E is odd-sized) with one psum after
+    w_out.
+    """
+    B, T, d = x.shape
+    E, K = mcfg.n_experts, mcfg.top_k
+    N = B * T
+    xf = x.reshape(N, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)                     # [N, K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ----- load-balancing auxiliary loss (Switch/GShard form) -----
+    me = probs.mean(axis=0)                                  # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (N * K))
+    aux = E * jnp.sum(me * ce)
+
+    # per-row capacity (padded to a multiple of 8)
+    C = int(mcfg.capacity_factor * T * K / E) or 1
+    C = min(-(-C // 8) * 8, T * K)
+
+    idx_r = idx.reshape(B, T, K)
+    gates_r = gates.reshape(B, T, K).astype(x.dtype)
+    x_e, dispatch = jax.vmap(
+        lambda xr, ir: _row_dispatch(xr, ir, E, C, K)
+    )(x, idx_r)                                              # [B, E, C, d]
+
+    ep = E % max(axis_size("experts"), 1) == 0
+    x_e = shard(x_e, None if ep else "batch", "experts", None, None)
+    h = jnp.einsum("becd,edf->becf", x_e, p["w_in"])
+    if "w_gate" in p:
+        g = jnp.einsum("becd,edf->becf", x_e, p["w_gate"])
+        h = common.activate(h, g, "swiglu")
+    else:
+        h = common.activate(h, None, "gelu")
+    y_e = jnp.einsum("becf,efd->becd", h, p["w_out"])
+    y_e = shard(y_e, None if ep else "batch", "experts", None, None)
+
+    y = jax.vmap(
+        lambda ye, gr, dp: _row_combine(ye, gr, dp, T, C, x.dtype)
+    )(y_e, gates_r, dispatch)                                # [B, T, d]
+    y = shard(y, "batch", None, None)
+
+    if mcfg.shared_expert:
+        h = xf @ p["s_in"]
+        if "s_gate" in p:
+            h = common.activate(h, xf @ p["s_gate"], "swiglu")
+        else:
+            h = common.activate(h, None, "gelu")
+        y = y + (h @ p["s_out"]).reshape(B, T, d)
+
+    return y, aux

@@ -1,0 +1,241 @@
+"""Recurrent mixers: RG-LRU (Griffin / RecurrentGemma) and RWKV-6 (Finch).
+
+Both are the LM-side cousins of the SNN engine's time-driven update: a
+per-step state recurrence with data-dependent decay, trained via scan.
+
+  RG-LRU:  h_t = a_t (.) h_{t-1} + sqrt(1 - a_t^2) (.) (i_t (.) x_t),
+           a_t = exp(-c softplus(L) (.) r_t); gated conv1d branch as in
+           Griffin (arXiv:2402.19427).  Train path uses an associative scan
+           (log-depth on TPU); decode carries h.
+
+  RWKV-6:  per-head state S in R^{dk x dv};
+           o_t = r_t (S + u (.) k_t^T v_t);  S <- diag(w_t) S + k_t^T v_t,
+           with data-dependent per-channel decay w_t via a low-rank MLP
+           (arXiv:2404.05892).  Train path scans T; decode carries S.
+
+Decode state (the recurrent 'KV cache'):
+  RG-LRU: {h: [B, d_rnn], conv: [B, w-1, d_rnn], xprev? -}
+  RWKV-6: {S: [B, H, dk, dv], xa: [B, d], xf: [B, d]}
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import common
+
+_RG_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+
+def init_rglru(key, path: str, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    dr = cfg.rg_lru_width or d
+    w = cfg.conv1d_width
+    return {
+        "w_x": common.dense_init(key, path + "/w_x", (d, dr), dtype),
+        "w_gate": common.dense_init(key, path + "/w_gate", (d, dr), dtype),
+        "conv_w": common.dense_init(key, path + "/conv_w", (w, dr), dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "wa": common.dense_init(key, path + "/wa", (dr, dr), dtype),
+        "ba": jnp.zeros((dr,), jnp.float32),
+        "wi": common.dense_init(key, path + "/wi", (dr, dr), dtype),
+        "bi": jnp.zeros((dr,), jnp.float32),
+        # Lambda init so that a in ~(0.9, 0.999) at r=1 (Griffin B.2)
+        "log_lambda": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, dr)) / _RG_C
+        )).astype(jnp.float32),
+        "w_out": common.dense_init(key, path + "/w_out", (dr, d), dtype),
+    }
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """x: [B,T,D]; w: [W,D] depthwise.  state: [B,W-1,D] tail of previous
+    tokens (decode).  Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)        # [B, T+W-1, D]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return y.astype(x.dtype), new_state
+
+
+def _rg_lru_scan(xb, a, h0=None):
+    """h_t = a_t*h_{t-1} + b_t.  xb, a: [B,T,D] fp32.
+
+    Dispatches to the sequential VMEM-resident Pallas kernel on TPU
+    (kernels/rg_lru.py) and to an associative scan elsewhere."""
+    from ..kernels import ops as kops
+    return kops.rg_lru_scan(a, xb, h0)
+
+
+def rglru(cfg: ModelConfig, p, x, state: Optional[dict] = None
+          ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: [B,T,d] -> (y, new_state)."""
+    gate = common.activate(x @ p["w_gate"], None, "gelu")
+    xi = x @ p["w_x"]
+    conv_state = None if state is None else state["conv"]
+    xi, new_conv = _causal_conv1d(xi, p["conv_w"], p["conv_b"], conv_state)
+
+    xf = xi.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(xf @ p["wi"].astype(jnp.float32) + p["bi"])
+    log_a = -_RG_C * jax.nn.softplus(p["log_lambda"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+
+    if state is None:
+        h = _rg_lru_scan(b, a)
+        new_state = None if x.shape[1] == 0 else {
+            "h": h[:, -1], "conv": new_conv}
+    else:
+        h = _rg_lru_scan(b, a, h0=state["h"])
+        new_state = {"h": h[:, -1], "conv": new_conv}
+
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return y, new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    dr = cfg.rg_lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, dr), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 block (time mix; the channel mix lives in transformer.py as an MLP
+# variant with token shift)
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv(key, path: str, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    lora = max(32, d // 32)
+    return {
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "w_r": common.dense_init(key, path + "/w_r", (d, d), dtype),
+        "w_k": common.dense_init(key, path + "/w_k", (d, d), dtype),
+        "w_v": common.dense_init(key, path + "/w_v", (d, d), dtype),
+        "w_g": common.dense_init(key, path + "/w_g", (d, d), dtype),
+        "w_o": common.dense_init(key, path + "/w_o", (d, d), dtype),
+        # data-dependent decay LoRA (Finch):  w = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": jnp.full((d,), -6.0, jnp.float32),
+        "decay_a": common.dense_init(key, path + "/decay_a", (d, lora),
+                                     dtype),
+        "decay_b": common.dense_init(key, path + "/decay_b", (lora, d),
+                                     dtype),
+        "bonus_u": jnp.zeros((H, dh), jnp.float32),
+        "ln_gamma": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _token_shift(x, mu, xprev=None):
+    """RWKV token shift: lerp(x_{t-1}, x_t, mu).  xprev: [B,d] carry."""
+    if xprev is None:
+        prev = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    else:
+        prev = jnp.concatenate([xprev[:, None].astype(x.dtype),
+                                x[:, :-1]], axis=1)
+    mu = mu.astype(jnp.float32)
+    return (x.astype(jnp.float32) * mu
+            + prev.astype(jnp.float32) * (1.0 - mu)).astype(x.dtype)
+
+
+def rwkv_time_mix(cfg: ModelConfig, p, x, state: Optional[dict] = None
+                  ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: [B,T,d] -> (y, new_state)."""
+    B, T, d = x.shape
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    xprev = None if state is None else state["xa"]
+
+    r = _token_shift(x, p["mu_r"], xprev) @ p["w_r"]
+    k = _token_shift(x, p["mu_k"], xprev) @ p["w_k"]
+    v = _token_shift(x, p["mu_v"], xprev) @ p["w_v"]
+    g = _token_shift(x, p["mu_g"], xprev) @ p["w_g"]
+    xw = _token_shift(x, p["mu_w"], xprev)
+    dec = p["decay_w0"] + jnp.tanh(
+        xw.astype(jnp.float32) @ p["decay_a"].astype(jnp.float32)
+    ) @ p["decay_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec))                       # [B,T,d] in (0,1)
+
+    r = r.reshape(B, T, H, dh).astype(jnp.float32)
+    k = k.reshape(B, T, H, dh).astype(jnp.float32)
+    v = v.reshape(B, T, H, dh).astype(jnp.float32)
+    w = w.reshape(B, T, H, dh)
+    u = p["bonus_u"]
+
+    s0 = jnp.zeros((B, H, dh, dh), jnp.float32) if state is None \
+        else state["S"]
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                          # [B,H,dh]
+        kv = kt[..., :, None] * vt[..., None, :]      # [B,H,dk,dv]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[..., None] * kv)
+        S = wt[..., None] * S + kv
+        return S, out
+
+    xs = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0))
+    S, outs = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(outs, 0, 1).reshape(B, T, d)     # [B,T,d] fp32
+
+    # per-head group norm, silu(g) gate, output projection
+    y = y.reshape(B, T, H, dh)
+    mu_ = y.mean(-1, keepdims=True)
+    var = ((y - mu_) ** 2).mean(-1, keepdims=True)
+    y = (y - mu_) * jax.lax.rsqrt(var + 1e-5)
+    y = y.reshape(B, T, d) * p["ln_gamma"]
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype) @ p["w_o"]
+
+    new_state = None
+    if state is not None or True:
+        new_state = {"S": S, "xa": x[:, -1]}
+    return y, new_state
+
+
+def init_rwkv_cmix(key, path: str, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "w_k": common.dense_init(key, path + "/w_k", (d, f), dtype),
+        "w_v": common.dense_init(key, path + "/w_v", (f, d), dtype),
+        "w_r": common.dense_init(key, path + "/w_r", (d, d), dtype),
+    }
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p, x, state: Optional[dict] = None):
+    """RWKV-6 channel mix (squared-relu MLP with token shift + r gate)."""
+    xprev = None if state is None else state["xf"]
+    xk = _token_shift(x, p["mu_k"], xprev)
+    xr = _token_shift(x, p["mu_r"], xprev)
+    k = jnp.square(jax.nn.relu((xk @ p["w_k"]).astype(jnp.float32)))
+    rgate = jax.nn.sigmoid((xr @ p["w_r"]).astype(jnp.float32))
+    y = (rgate * (k.astype(x.dtype) @ p["w_v"]).astype(jnp.float32))
+    return y.astype(x.dtype), x[:, -1]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    return {"S": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "xa": jnp.zeros((batch, d), dtype),
+            "xf": jnp.zeros((batch, d), dtype)}

@@ -1,0 +1,239 @@
+"""The transformer stack: pattern-expanded layers, scan-over-units HLO
+compaction, KV/recurrent-state caches, MoE aux-loss plumbing.
+
+Layer structure (pre-norm residual):
+    x = x + rs * Mixer(RMSNorm(x))        rs = cfg.residual_scale
+    x = x + rs * MLP(RMSNorm(x))
+
+The repeating `cfg.pattern` unit is scanned with stacked params (compact
+HLO at any depth — essential for compiling 48-62 layer configs with 512
+partitions); the `n_layers % len(pattern)` remainder is unrolled.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import shard
+from . import attention, common, mlp as mlp_mod, moe as moe_mod, recurrent
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, path: str, cfg: ModelConfig, kinds: Tuple[str, str],
+                dtype):
+    mixer_kind, mlp_kind = kinds
+    p: Dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), jnp.float32),
+                         "norm2": jnp.ones((cfg.d_model,), jnp.float32)}
+    if mixer_kind in ("ga", "la", "bi"):
+        p["mixer"] = attention.init_attn(key, path + "/attn", cfg, dtype)
+    elif mixer_kind == "xa":
+        p["mixer"] = attention.init_attn(key, path + "/attn", cfg, dtype)
+        p["cross"] = attention.init_attn(key, path + "/cross", cfg, dtype)
+        p["norm3"] = jnp.ones((cfg.d_model,), jnp.float32)
+    elif mixer_kind == "rg":
+        p["mixer"] = recurrent.init_rglru(key, path + "/rg", cfg, dtype)
+    elif mixer_kind == "rwkv":
+        p["mixer"] = recurrent.init_rwkv(key, path + "/rwkv", cfg, dtype)
+    else:
+        raise ValueError(mixer_kind)
+
+    if mlp_kind == "dense":
+        p["mlp"] = mlp_mod.init_mlp(key, path + "/mlp", cfg.d_model,
+                                    cfg.d_ff, cfg.act, dtype)
+    elif mlp_kind == "moe":
+        p["mlp"] = moe_mod.init_moe(key, path + "/moe", cfg.d_model,
+                                    cfg.moe, cfg.act, dtype)
+    elif mlp_kind == "cmix":
+        p["mlp"] = recurrent.init_rwkv_cmix(key, path + "/cmix", cfg, dtype)
+    else:
+        raise ValueError(mlp_kind)
+    return p
+
+
+def _apply_layer(cfg: ModelConfig, kinds: Tuple[str, str], p, x, positions,
+                 cache: Optional[dict], cache_pos, enc_kv) -> Tuple:
+    """Returns (x, new_cache, aux)."""
+    mixer_kind, mlp_kind = kinds
+    rs = cfg.residual_scale
+    aux = jnp.float32(0.0)
+    new_cache: Dict[str, Any] = {}
+
+    h = common.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if mixer_kind in ("ga", "la", "bi"):
+        window = cfg.window if mixer_kind == "la" else None
+        kv_cache = cache.get("kv") if cache else None
+        y, kv_new = attention.attention(
+            cfg, p["mixer"], h, positions, causal=(mixer_kind != "bi"),
+            window=window, cache=kv_cache, cache_pos=cache_pos)
+        if kv_new is not None:
+            new_cache["kv"] = kv_new
+    elif mixer_kind == "xa":
+        kv_cache = cache.get("kv") if cache else None
+        y, kv_new = attention.attention(
+            cfg, p["mixer"], h, positions, causal=True, cache=kv_cache,
+            cache_pos=cache_pos)
+        if kv_new is not None:
+            new_cache["kv"] = kv_new
+        x = x + rs * y
+        h = common.rms_norm(x, p["norm3"], cfg.norm_eps)
+        y, _ = attention.attention(cfg, p["cross"], h, positions,
+                                   causal=False, kv_override=enc_kv)
+    elif mixer_kind == "rg":
+        st = cache.get("rg") if cache else None
+        y, st_new = recurrent.rglru(cfg, p["mixer"], h, st)
+        if cache is not None:
+            new_cache["rg"] = st_new
+    elif mixer_kind == "rwkv":
+        st = cache.get("rwkv") if cache else None
+        y, st_new = recurrent.rwkv_time_mix(cfg, p["mixer"], h, st)
+        if cache is not None:
+            new_cache["rwkv"] = st_new
+    else:
+        raise ValueError(mixer_kind)
+    x = x + rs * y
+    x = shard(x, "batch", None, None)
+
+    h = common.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if mlp_kind == "dense":
+        y = mlp_mod.mlp(p["mlp"], h, cfg.act)
+    elif mlp_kind == "moe":
+        y, aux = moe_mod.moe(p["mlp"], h, cfg.moe, cfg.act)
+    elif mlp_kind == "cmix":
+        st = cache.get("rwkv") if cache else None
+        y, xf_new = recurrent.rwkv_channel_mix(cfg, p["mlp"], h, st)
+        if cache is not None and "rwkv" in new_cache:
+            new_cache["rwkv"]["xf"] = xf_new
+    x = x + rs * y
+    x = shard(x, "batch", None, None)
+    return x, (new_cache if cache is not None else None), aux
+
+
+# ---------------------------------------------------------------------------
+# stack init
+# ---------------------------------------------------------------------------
+
+
+def init_stack(key, path: str, cfg: ModelConfig, dtype):
+    """Params: {'units': stacked-over-units pytree, 'rem': [layer dicts]}."""
+    pat = cfg.pattern
+    n_units = cfg.n_units
+
+    def unit_at(u):
+        return {f"layer{i}": _init_layer(
+            jax.random.fold_in(key, u), f"{path}/u/l{i}", cfg, pat[i], dtype)
+            for i in range(len(pat))}
+
+    units = None
+    if n_units > 0:
+        units = jax.vmap(unit_at)(jnp.arange(n_units))
+    rem = [ _init_layer(jax.random.fold_in(key, 10_000 + r),
+                        f"{path}/rem{r}", cfg, cfg.layers[n_units * len(pat) + r],
+                        dtype)
+            for r in range(cfg.n_remainder)]
+    return {"units": units, "rem": rem}
+
+
+def apply_stack(cfg: ModelConfig, params, x, positions, *,
+                caches: Optional[dict] = None, cache_pos=None, enc_kv=None):
+    """Returns (x, new_caches, aux_sum)."""
+    pat = cfg.pattern
+    n_units = cfg.n_units
+    decode = caches is not None
+
+    aux_total = jnp.float32(0.0)
+    new_caches: Dict[str, Any] = {}
+
+    if n_units > 0:
+        # remat at LAYER granularity: backward recomputes one layer at a
+        # time from its input — per-unit remat left the whole unit's
+        # intermediates live at once (6 layers for gemma3's pattern), which
+        # measured 6x worse (EXPERIMENTS.md §Perf)
+        def layer_fn(kinds, lp, x, c):
+            return _apply_layer(cfg, kinds, lp, x, positions, c, cache_pos,
+                                enc_kv)
+
+        if not decode:
+            layer_fn = jax.checkpoint(
+                layer_fn, policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=(0,))
+
+        def unit_fn(carry, xs):
+            x, aux = carry
+            up, ucache = xs
+            new_ucache = {}
+            for i, kinds in enumerate(pat):
+                c = ucache[f"layer{i}"] if decode else None
+                x, nc, a = layer_fn(kinds, up[f"layer{i}"], x, c)
+                aux = aux + a
+                new_ucache[f"layer{i}"] = nc if decode else 0
+            return (x, aux), new_ucache
+
+        if not decode and len(pat) > 1:
+            # nested remat for multi-layer units: the scan saves ONE
+            # residual per unit; the unit's backward recompute then saves
+            # one residual per layer transiently.  Layer-only remat made
+            # the scan save len(pat) residuals per unit (gemma3: 96 ->
+            # 150 GB, refuted); unit-only remat kept a whole 6-layer
+            # backward live set (96 GB).  Nesting gets both bounds.
+            unit_fn = jax.checkpoint(
+                unit_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+        ucaches = caches["units"] if decode else jax.tree.map(
+            lambda _: jnp.zeros((n_units,)), {f"layer{i}": 0
+                                              for i in range(len(pat))})
+        (x, aux_total), out_ucaches = jax.lax.scan(
+            unit_fn, (x, aux_total), (params["units"], ucaches))
+        new_caches["units"] = out_ucaches if decode else None
+
+    new_caches["rem"] = []
+    for r in range(cfg.n_remainder):
+        kinds = cfg.layers[n_units * len(pat) + r]
+        c = caches["rem"][r] if decode else None
+        x, nc, a = _apply_layer(cfg, kinds, params["rem"][r], x, positions,
+                                c, cache_pos, enc_kv)
+        aux_total = aux_total + a
+        new_caches["rem"].append(nc)
+
+    return x, (new_caches if decode else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache(cfg: ModelConfig, kinds, batch: int, s_max: int, dtype):
+    mixer_kind, mlp_kind = kinds
+    c: Dict[str, Any] = {}
+    if mixer_kind in ("ga", "la", "xa"):
+        s_r = s_max
+        if mixer_kind == "la" and cfg.window:
+            s_r = min(s_max, cfg.window)   # ring buffer: O(window) memory
+        shape = (batch, s_r, cfg.n_kv_heads, cfg.head_dim)
+        c["kv"] = (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    if mixer_kind == "rg":
+        c["rg"] = recurrent.init_rglru_state(cfg, batch, dtype)
+    if mixer_kind == "rwkv" or mlp_kind == "cmix":
+        c["rwkv"] = recurrent.init_rwkv_state(cfg, batch, dtype)
+    return c
+
+
+def init_caches(cfg: ModelConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    pat = cfg.pattern
+    n_units = cfg.n_units
+
+    def unit_cache(_):
+        return {f"layer{i}": _layer_cache(cfg, pat[i], batch, s_max, dtype)
+                for i in range(len(pat))}
+
+    units = jax.vmap(unit_cache)(jnp.arange(n_units)) if n_units else None
+    rem = [_layer_cache(cfg, cfg.layers[n_units * len(pat) + r], batch,
+                        s_max, dtype) for r in range(cfg.n_remainder)]
+    return {"units": units, "rem": rem}

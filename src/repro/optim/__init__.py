@@ -1,0 +1,3 @@
+from . import adamw, grad_utils, schedules
+
+__all__ = ["adamw", "grad_utils", "schedules"]

@@ -1,0 +1,55 @@
+"""Sharded AdamW (built from scratch — no optax in this environment).
+
+Optimizer state is a pytree mirroring params (m, v in fp32); under pjit it
+inherits the params' sharding (FSDP over 'data' + TP over 'model'), so
+memory scales 1/chips like the weights.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray       # [] int32
+    m: Any                  # pytree like params, fp32
+    v: Any                  # pytree like params, fp32
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def update(grads, state: AdamWState, params, *, lr,
+           b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+           weight_decay: float = 0.1) -> Tuple[Any, AdamWState]:
+    """Returns (new_params, new_state).  lr may be a scalar or callable of
+    step."""
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1.0 - b1) * gf
+        v2 = b2 * v + (1.0 - b2) * gf * gf
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        pf = p.astype(jnp.float32)
+        step_ = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * pf
+        return (pf - lr_t * step_).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,44 @@
+"""Gradient utilities: global-norm clipping and bf16 gradient compression
+with error feedback (the distributed-optimization trick for cross-pod
+all-reduce: halves DCN bytes; the residual buffer keeps it unbiased over
+time)."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads, residual) -> Tuple[Any, Any]:
+    """bf16-quantize grads (for the wire); residual carries the error.
+
+    Returns (compressed bf16 grads, new residual).  The all-reduce across
+    the 'pod' axis then moves half the bytes; decompression is a cast."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q = gf.astype(jnp.bfloat16)
+        return q, gf - q.astype(jnp.float32)
+
+    out = jax.tree.map(one, grads, residual)
+    comp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return comp, res

@@ -1,0 +1,35 @@
+"""LR schedules: WSD (warmup-stable-decay, the MiniCPM arch's defining
+schedule) and cosine."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd(peak_lr: float, warmup: int, stable: int, decay: int,
+        final_frac: float = 0.1):
+    """MiniCPM WSD: linear warmup -> flat -> exponential-ish decay."""
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        flat = jnp.float32(peak_lr)
+        t = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = peak_lr * (final_frac ** t)
+        return jnp.where(s < warmup, warm,
+                         jnp.where(s < warmup + stable, flat, dec))
+    return f
+
+
+def cosine(peak_lr: float, warmup: int, total: int,
+           final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(
+            jnp.pi * t))
+        return jnp.where(s < warmup, warm, peak_lr * cos)
+    return f
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)

@@ -1,0 +1,3 @@
+from . import engine, sampling
+
+__all__ = ["engine", "sampling"]

@@ -1,0 +1,18 @@
+"""Token sampling strategies."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    return logits.argmax(-1).astype(jnp.int32)
+
+
+def temperature(key, logits: jnp.ndarray, temp: float = 1.0,
+                top_k: int = 0) -> jnp.ndarray:
+    lf = logits.astype(jnp.float32) / max(temp, 1e-6)
+    if top_k:
+        thresh = jax.lax.top_k(lf, top_k)[0][..., -1:]
+        lf = jnp.where(lf < thresh, -1e30, lf)
+    return jax.random.categorical(key, lf).astype(jnp.int32)

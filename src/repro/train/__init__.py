@@ -1,0 +1,3 @@
+from . import step, trainer, train_state
+
+__all__ = ["step", "trainer", "train_state"]

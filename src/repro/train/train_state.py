@@ -1,0 +1,82 @@
+"""Train state + layout-free LM checkpointing (same crash-safe atomic-rename
+discipline as the SNN engine's core.checkpoint)."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    step: jnp.ndarray          # [] int32 (global step, == opt.step)
+    ef_residual: Optional[Any] = None   # error-feedback buffer (optional)
+
+
+def create(params, use_error_feedback: bool = False) -> TrainState:
+    from ..optim import grad_utils
+    ef = grad_utils.init_error_feedback(params) if use_error_feedback \
+        else None
+    return TrainState(params=params, opt=adamw.init(params),
+                      step=jnp.zeros((), jnp.int32), ef_residual=ef)
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, state: TrainState, extra: Optional[dict] = None) -> str:
+    leaves, _ = _flatten(state)
+    payload, dtypes = {}, []
+    for i, x in enumerate(leaves):
+        a = np.asarray(x)
+        dtypes.append(str(a.dtype))
+        if a.dtype.kind not in "fiub" or str(a.dtype) == "bfloat16":
+            a = a.view(np.uint16) if a.itemsize == 2 else a.view(np.uint8)
+        payload[f"leaf_{i}"] = a
+    meta = dict(n_leaves=len(leaves), step=int(state.step),
+                dtypes=dtypes, extra=extra or {})
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, meta=json.dumps(meta), **payload)
+    os.replace(tmp, path)
+    return path
+
+
+def load(path: str, template: TrainState) -> TrainState:
+    import ml_dtypes
+    z = np.load(path, allow_pickle=False)
+    meta = json.loads(str(z["meta"]))
+    leaves, treedef = _flatten(template)
+    new = []
+    for i in range(len(leaves)):
+        a = z[f"leaf_{i}"]
+        want = meta["dtypes"][i]
+        if str(a.dtype) != want:
+            a = a.view(np.dtype(getattr(ml_dtypes, want, want)))
+        new.append(jnp.asarray(a))
+    for a, b in zip(leaves, new):
+        assert a.shape == b.shape, (a.shape, b.shape)
+    return jax.tree.unflatten(treedef, new)
+
+
+def latest(directory: str, prefix: str = "lm_") -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    cands = [f for f in os.listdir(directory)
+             if f.startswith(prefix) and f.endswith(".npz")]
+    if not cands:
+        return None
+    return os.path.join(directory,
+                        max(cands, key=lambda f: int(f[len(prefix):-4])))

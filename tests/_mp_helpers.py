@@ -1,0 +1,23 @@
+"""Helpers for tests that need multiple (host-platform) devices.
+
+jax locks the device count at first init, so multi-device checks run in a
+subprocess with XLA_FLAGS set; the parent process keeps its single device.
+"""
+import os
+import subprocess
+import sys
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_with_devices(code: str, n_devices: int, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    if out.returncode != 0:
+        raise RuntimeError(f"subprocess failed:\nSTDOUT:\n{out.stdout}\n"
+                           f"STDERR:\n{out.stderr}")
+    return out.stdout

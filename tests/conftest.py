@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Make src/ importable when PYTHONPATH is not set.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see the real single device.  Multi-device tests spawn
+# subprocesses with their own XLA_FLAGS (see tests/_mp_helpers.py).

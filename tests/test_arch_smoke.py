@@ -1,0 +1,165 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + train-grad step + (where applicable) decode step on CPU; asserts
+output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import lm
+
+B, T = 2, 16
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    b = {}
+    if cfg.modality == "vlm":
+        b["embeds"] = jax.random.normal(ks[0], (B, T, cfg.d_model),
+                                        jnp.bfloat16)
+    else:
+        b["tokens"] = jax.random.randint(ks[0], (B, T), 0, cfg.vocab_size)
+    if cfg.family == "encdec":
+        b["enc_embeds"] = jax.random.normal(ks[1], (B, 24, cfg.d_model),
+                                            jnp.bfloat16)
+        b["tokens"] = jax.random.randint(ks[0], (B, T), 0, cfg.vocab_size)
+    b["labels"] = jax.random.randint(ks[2], (B, T), 0, cfg.vocab_size)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg, jax.random.key(1))
+    logits, aux = jax.jit(lambda p, b: lm.forward(cfg, p, b))(params, batch)
+    assert logits.shape == (B, T, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_grad_step(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg, jax.random.key(1))
+
+    def loss(p):
+        l, _ = lm.loss_fn(cfg, p, batch)
+        return l
+
+    val, grads = jax.jit(jax.value_and_grad(loss))(params)
+    assert bool(jnp.isfinite(val))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g.astype(jnp.float32)).all())
+               for g in flat)
+    # at least some gradient signal everywhere important
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in flat) ** 0.5
+    assert gnorm > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.modality == "vlm":
+        pytest.skip("vlm decode exercised via text path (same backbone)")
+    params = lm.init_params(cfg, jax.random.key(0))
+    enc_out = None
+    if cfg.family == "encdec":
+        enc = jax.random.normal(jax.random.key(5), (B, 24, cfg.d_model),
+                                jnp.bfloat16)
+        enc_out = lm.encode(cfg, params, enc)
+    cache = lm.init_cache(cfg, B, 32, enc_out=enc_out)
+    tok = jnp.ones((B, 1), jnp.int32)
+    step = jax.jit(lambda c, t: lm.decode_step(cfg, params, c, t))
+    for i in range(3):
+        logits, cache = step(cache, tok)
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+        tok = logits.argmax(-1).astype(jnp.int32)
+    assert int(cache["pos"]) == 3
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    """Greedy decode logits == teacher-forced forward logits (same prefix).
+
+    Recurrent/windowed archs must agree too: the cache math is exact."""
+    cfg = get_smoke_config(arch)
+    if cfg.modality == "vlm":
+        pytest.skip("vlm uses embeds input; equivalence tested via text archs")
+    params = lm.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(7), (B, 8), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    enc_out = None
+    if cfg.family == "encdec":
+        enc = jax.random.normal(jax.random.key(5), (B, 24, cfg.d_model),
+                                jnp.bfloat16)
+        batch["enc_embeds"] = enc
+        enc_out = lm.encode(cfg, params, enc)
+    full_logits, _ = jax.jit(lambda p, b: lm.forward(cfg, p, b))(params,
+                                                                 batch)
+
+    cache = lm.init_cache(cfg, B, 8, enc_out=enc_out)
+    outs = []
+    step = jax.jit(lambda c, t: lm.decode_step(cfg, params, c, t))
+    for i in range(8):
+        lg, cache = step(cache, toks[:, i:i + 1])
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    # bf16 params + different accumulation order => noise on near-zero
+    # logits; atol set to ~0.2% of the observed logit scale.
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=2e-2, atol=0.25)
+
+
+def test_param_counts_match_published():
+    """Full configs must land near the published parameter counts."""
+    import math
+
+    def count(cfg):
+        d, H, Hkv, dh, f, V, L = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.head_dim, cfg.d_ff, cfg.vocab_size,
+                                  cfg.n_layers)
+        total = V * d * (1 if cfg.tie_embeddings else 2)
+        for (mixer, mlp) in cfg.layers:
+            if mixer in ("ga", "la", "bi", "xa"):
+                attn = d * H * dh + 2 * d * Hkv * dh + H * dh * d
+                total += attn * (2 if mixer == "xa" else 1)
+            elif mixer == "rg":
+                dr = cfg.rg_lru_width or d
+                total += 2 * d * dr + 2 * dr * dr + dr * d
+            elif mixer == "rwkv":
+                total += 4 * d * d + d * d
+            if mlp == "dense":
+                total += d * f * (3 if cfg.act == "swiglu" else 2)
+            elif mlp == "moe":
+                m = cfg.moe
+                per = m.d_ff_expert * d * (3 if cfg.act == "swiglu" else 2)
+                total += m.n_experts * per + d * m.n_experts
+                if m.shared_expert:
+                    total += per
+            elif mlp == "cmix":
+                total += d * f * 2 + d * d
+        if cfg.family == "encdec":
+            attn = d * H * dh + 2 * d * Hkv * dh + H * dh * d
+            total += cfg.n_encoder_layers * (
+                attn + d * f * (3 if cfg.act == "swiglu" else 2))
+        return total
+
+    published = {
+        "minicpm-2b": 2.4e9, "internlm2-20b": 19.9e9, "gemma3-27b": 27e9,
+        "qwen3-0.6b": 0.6e9, "llava-next-34b": 34e9,
+        "recurrentgemma-2b": 2.7e9, "rwkv6-1.6b": 1.6e9,
+        # seamless-m4t-medium is 1.2B incl. the conformer speech frontend,
+        # which is a stub by spec; the transformer backbone is ~0.6B.
+        "seamless-m4t-medium": 0.6e9, "granite-moe-3b-a800m": 3.3e9,
+        "llama4-maverick-400b-a17b": 400e9,
+    }
+    for arch, want in published.items():
+        got = count(get_config(arch))
+        assert 0.55 * want < got < 1.55 * want, \
+            f"{arch}: analytic {got/1e9:.2f}B vs published {want/1e9:.1f}B"

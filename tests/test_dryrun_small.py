@@ -1,0 +1,72 @@
+"""Miniature dry-run: the full lower->compile->analyze pipeline on a small
+mesh (8 fake devices) with reduced configs — fast enough for CI, proves the
+launch plumbing end-to-end.  The production 512-device matrix runs via
+`python -m repro.launch.dryrun --all` (results in results/dryrun/)."""
+import json
+
+import pytest
+
+from _mp_helpers import run_with_devices
+
+_CODE = """
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.dist import sharding as shd
+from repro.launch import hlo_cost
+from repro.launch import input_specs as ispec
+from repro.optim import schedules
+from repro.train import step as step_mod
+from repro.train.train_state import TrainState
+from repro.optim import adamw
+from repro.models import lm
+
+mesh = jax.make_mesh((2, 4), ('data', 'model'))
+cfg = get_smoke_config({arch!r})
+
+with shd.use_mesh(mesh):
+    params = jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                            jax.random.key(0))
+    shardings = shd.tree_shardings(params, mesh, shd.infer_param_spec)
+    params = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        params, shardings)
+
+    def like_f32(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32,
+                                    sharding=p.sharding)
+    state = TrainState(params=params,
+                       opt=adamw.AdamWState(
+                           step=jax.ShapeDtypeStruct((), jnp.int32),
+                           m=jax.tree.map(like_f32, params),
+                           v=jax.tree.map(like_f32, params)),
+                       step=jax.ShapeDtypeStruct((), jnp.int32),
+                       ef_residual=None)
+    B, T = 8, 64
+    batch = {{'tokens': jax.ShapeDtypeStruct((B, T), jnp.int32),
+             'labels': jax.ShapeDtypeStruct((B, T), jnp.int32)}}
+    if cfg.modality == 'vlm':
+        batch['embeds'] = jax.ShapeDtypeStruct((B, T, cfg.d_model),
+                                               jnp.bfloat16)
+    if cfg.family == 'encdec':
+        batch['enc_embeds'] = jax.ShapeDtypeStruct((B, 32, cfg.d_model),
+                                                   jnp.bfloat16)
+    fn = step_mod.make_train_step(
+        cfg, lr_schedule=schedules.constant(1e-3))
+    lowered = jax.jit(fn).lower(state, batch)
+    compiled = lowered.compile()
+
+mem = compiled.memory_analysis()
+res = hlo_cost.analyze(compiled.as_text())
+assert res['flops'] > 0, 'analyzer found no FLOPs'
+assert mem.temp_size_in_bytes > 0
+print('DRYRUN_SMALL OK', res['flops'] > 0, res['collectives']['total'])
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "granite-moe-3b-a800m",
+                                  "recurrentgemma-2b", "rwkv6-1.6b",
+                                  "seamless-m4t-medium"])
+def test_small_mesh_dryrun(arch):
+    out = run_with_devices(_CODE.format(arch=arch), 8, timeout=900)
+    assert "DRYRUN_SMALL OK" in out

@@ -1,0 +1,262 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes/dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import NEG_TIME
+from repro.kernels import ops, ref
+
+STDP_KW = dict(a_minus=0.12, tau_minus=20.0, w_min=0.0, w_max=10.0,
+               neg_time=float(NEG_TIME))
+LTP_KW = dict(a_plus=0.1, tau_plus=20.0, w_min=0.0, w_max=10.0,
+              neg_time=float(NEG_TIME))
+
+
+def _neuron_inputs(n, seed=0):
+    k = jax.random.split(jax.random.key(seed), 3)
+    v = jax.random.uniform(k[0], (n,), jnp.float32, -80.0, 29.0)
+    u = jax.random.uniform(k[1], (n,), jnp.float32, -20.0, 10.0)
+    cur = jax.random.uniform(k[2], (n,), jnp.float32, -10.0, 25.0)
+    exc = jnp.arange(n) % 5 != 4
+    a = jnp.where(exc, 0.02, 0.1).astype(jnp.float32)
+    b = jnp.full((n,), 0.2, jnp.float32)
+    c = jnp.full((n,), -65.0, jnp.float32)
+    d = jnp.where(exc, 8.0, 2.0).astype(jnp.float32)
+    return v, u, cur, a, b, c, d
+
+
+class TestIzhikevichKernel:
+    @pytest.mark.parametrize("n", [7, 128, 1000, 4096, 5003])
+    def test_matches_oracle(self, n):
+        # fp32 op-ordering in interpret mode differs by a few ulp; the v^2
+        # term amplifies that to ~1e-4 relative near threshold.
+        args = _neuron_inputs(n, seed=n)
+        v1, u1, s1 = ops.izhikevich_update(*args, v_peak=30.0,
+                                           interpret=True)
+        v2, u2, s2 = ref.izhikevich_update(*args, v_peak=30.0)
+        np.testing.assert_allclose(v1, v2, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(u1, u2, rtol=1e-4, atol=1e-3)
+        # spike flags must agree except within an ulp-band of threshold
+        v, u, cur, a, b, _, _ = args
+        vpre = v
+        for _ in range(2):
+            vpre = vpre + 0.5 * (0.04 * vpre * vpre + 5.0 * vpre + 140.0
+                                 - u + cur)
+        disagree = np.asarray(s1 != s2)
+        borderline = np.abs(np.asarray(vpre) - 30.0) < 1e-2
+        assert not (disagree & ~borderline).any()
+
+    def test_some_spikes_occur(self):
+        args = _neuron_inputs(512, seed=3)
+        args = (jnp.full((512,), 29.9, jnp.float32),) + args[1:]
+        _, _, s = ops.izhikevich_update(*args, v_peak=30.0, interpret=True)
+        assert int(s.sum()) > 0
+
+
+def _stdp_inputs(e, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 5)
+    arr = jax.random.bernoulli(ks[0], 0.2, (e,))
+    w = jax.random.uniform(ks[1], (e,), jnp.float32, 0.0, 10.0)
+    lp = jnp.where(jax.random.bernoulli(ks[2], 0.7, (e,)),
+                   jax.random.uniform(ks[3], (e,), jnp.float32, 0.0, 90.0),
+                   NEG_TIME)
+    la = jnp.where(jax.random.bernoulli(ks[4], 0.7, (e,)),
+                   jax.random.uniform(ks[3], (e,), jnp.float32, 0.0, 99.0),
+                   NEG_TIME)
+    plastic = jax.random.bernoulli(ks[2], 0.8, (e,))
+    return arr, w, lp, la, plastic
+
+
+class TestStdpKernels:
+    @pytest.mark.parametrize("e", [16, 1024, 4096, 9999])
+    def test_arrival_matches_oracle(self, e):
+        arr, w, lp, la, plastic = _stdp_inputs(e, seed=e)
+        t = jnp.float32(100.0)
+        out1 = ops.stdp_arrival(arr, w, lp, la, plastic, t, interpret=True,
+                                **STDP_KW)
+        out2 = ref.stdp_arrival(arr, w, lp, la, plastic, t, **STDP_KW)
+        for a, b in zip(out1, out2):
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("e", [16, 1024, 9999])
+    def test_ltp_matches_oracle(self, e):
+        arr, w, lp, la, plastic = _stdp_inputs(e, seed=e + 1)
+        valid = jnp.ones((e,), bool)
+        t = jnp.float32(100.0)
+        w1 = ops.stdp_ltp(arr, w, la, plastic, valid, t, interpret=True,
+                          **LTP_KW)
+        w2 = ref.stdp_ltp(arr, w, la, plastic, valid, t, **LTP_KW)
+        np.testing.assert_allclose(w1, w2, rtol=1e-6, atol=1e-6)
+
+    def test_ltd_depresses_ltp_potentiates(self):
+        e = 256
+        arr = jnp.ones((e,), bool)
+        w = jnp.full((e,), 5.0, jnp.float32)
+        lp = jnp.full((e,), 99.0, jnp.float32)   # recent post spike
+        la = jnp.full((e,), 99.0, jnp.float32)
+        plastic = jnp.ones((e,), bool)
+        t = jnp.float32(100.0)
+        w_ltd, _, _ = ops.stdp_arrival(arr, w, lp, la, plastic, t,
+                                       interpret=True, **STDP_KW)
+        assert float(w_ltd.max()) < 5.0          # depression
+        w_ltp = ops.stdp_ltp(arr, w, la, plastic, jnp.ones((e,), bool), t,
+                             interpret=True, **LTP_KW)
+        assert float(w_ltp.min()) > 5.0          # potentiation
+
+    def test_stdp_window_shape(self):
+        """LTP magnitude decays with dt; at dt=0 it is exactly a_plus."""
+        w = jnp.full((4,), 5.0, jnp.float32)
+        la = jnp.array([100.0, 80.0, 60.0, 40.0], jnp.float32)
+        post = jnp.ones((4,), bool)
+        out = ref.stdp_ltp(post, w, la, post, post, jnp.float32(100.0),
+                           **LTP_KW)
+        dw = np.asarray(out) - 5.0
+        assert dw[0] == pytest.approx(0.1, rel=1e-5)
+        assert np.all(np.diff(dw) < 0)           # monotone decay
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("t,s,d", [(128, 128, 64), (256, 256, 64),
+                                       (128, 384, 128), (256, 256, 80)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_matches_oracle(self, t, s, d, dtype):
+        ks = jax.random.split(jax.random.key(t + s + d), 3)
+        q = jax.random.normal(ks[0], (2, t, d), dtype)
+        k = jax.random.normal(ks[1], (2, s, d), dtype)
+        v = jax.random.normal(ks[2], (2, s, d), dtype)
+        o1 = ops.attention(q, k, v, causal=True, interpret=True)
+        o2 = ref.attention(q, k, v, causal=True)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(o1, np.float32),
+                                   np.asarray(o2, np.float32),
+                                   rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("window", [64, 128, 1024])
+    def test_window_matches_oracle(self, window):
+        ks = jax.random.split(jax.random.key(window), 3)
+        q = jax.random.normal(ks[0], (2, 256, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (2, 256, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (2, 256, 64), jnp.float32)
+        o1 = ops.attention(q, k, v, causal=True, window=window,
+                           interpret=True)
+        o2 = ref.attention(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(o1, o2, rtol=2e-5, atol=2e-5)
+
+    def test_softcap(self):
+        ks = jax.random.split(jax.random.key(9), 3)
+        q = jax.random.normal(ks[0], (1, 128, 64), jnp.float32) * 4
+        k = jax.random.normal(ks[1], (1, 128, 64), jnp.float32) * 4
+        v = jax.random.normal(ks[2], (1, 128, 64), jnp.float32)
+        o1 = ops.attention(q, k, v, causal=True, softcap=50.0,
+                           interpret=True)
+        o2 = ref.attention(q, k, v, causal=True, softcap=50.0)
+        np.testing.assert_allclose(o1, o2, rtol=2e-5, atol=2e-5)
+
+    def test_decode_offset_alignment(self):
+        """T < S: queries are the LAST T positions (KV-cache decode)."""
+        ks = jax.random.split(jax.random.key(4), 3)
+        q = jax.random.normal(ks[0], (1, 128, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 512, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 512, 64), jnp.float32)
+        o1 = ops.attention(q, k, v, causal=True, interpret=True)
+        o2 = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(o1, o2, rtol=2e-5, atol=2e-5)
+        # the last query row attends to everything: equals full softmax row
+        full = ref.attention(q[:, -1:], k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(o2)[:, -1:], full, rtol=2e-5,
+                                   atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests on the kernels' invariants
+# ---------------------------------------------------------------------------
+
+class TestProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(1, 600), seed=st.integers(0, 2 ** 16))
+    def test_izh_kernel_equals_oracle_any_shape(self, n, seed):
+        args = _neuron_inputs(n, seed=seed)
+        v1, u1, s1 = ops.izhikevich_update(*args, v_peak=30.0,
+                                           interpret=True)
+        v2, u2, s2 = ref.izhikevich_update(*args, v_peak=30.0)
+        np.testing.assert_allclose(v1, v2, rtol=1e-4, atol=1e-3)
+        v, u, cur = args[0], args[1], args[2]
+        vpre = v
+        for _ in range(2):
+            vpre = vpre + 0.5 * (0.04 * vpre * vpre + 5.0 * vpre + 140.0
+                                 - u + cur)
+        disagree = np.asarray(s1 != s2)
+        borderline = np.abs(np.asarray(vpre) - 30.0) < 1e-2
+        assert not (disagree & ~borderline).any()
+
+    @settings(max_examples=20, deadline=None)
+    @given(e=st.integers(1, 3000), seed=st.integers(0, 2 ** 16),
+           t=st.floats(1.0, 1e5))
+    def test_stdp_weights_always_bounded(self, e, seed, t):
+        arr, w, lp, la, plastic = _stdp_inputs(e, seed=seed)
+        wt = jnp.float32(t)
+        w1, la1, _ = ops.stdp_arrival(arr, w, lp, la, plastic, wt,
+                                      interpret=True, **STDP_KW)
+        w2 = ops.stdp_ltp(arr, w1, la1, plastic, jnp.ones((e,), bool), wt,
+                          interpret=True, **LTP_KW)
+        pl_ = np.asarray(plastic)
+        if pl_.any():
+            assert np.asarray(w2)[pl_].min() >= 0.0 - 1e-6
+            assert np.asarray(w2)[pl_].max() <= 10.0 + 1e-6
+        # non-plastic weights untouched by both passes
+        np.testing.assert_array_equal(np.asarray(w2)[~pl_],
+                                      np.asarray(w)[~pl_])
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16))
+    def test_attention_rows_are_convex_combinations(self, seed):
+        """Each output row lies in the convex hull of v rows => bounded by
+        per-coordinate min/max of v (prefix for causal)."""
+        ks = jax.random.split(jax.random.key(seed), 3)
+        q = jax.random.normal(ks[0], (1, 128, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 128, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 128, 64), jnp.float32)
+        o = np.asarray(ops.attention(q, k, v, causal=True, interpret=True))
+        vv = np.asarray(v)
+        run_max = np.maximum.accumulate(vv[0], axis=0)
+        run_min = np.minimum.accumulate(vv[0], axis=0)
+        assert (o[0] <= run_max + 1e-4).all()
+        assert (o[0] >= run_min - 1e-4).all()
+
+
+class TestRgLruKernel:
+    @pytest.mark.parametrize("shape", [(2, 64, 128), (3, 100, 96),
+                                       (8, 256, 256), (1, 17, 130)])
+    def test_matches_oracle(self, shape):
+        B, T, D = shape
+        ks = jax.random.split(jax.random.key(sum(shape)), 3)
+        a = jax.random.uniform(ks[0], shape, jnp.float32, 0.8, 0.999)
+        b = jax.random.normal(ks[1], shape, jnp.float32) * 0.1
+        h0 = jax.random.normal(ks[2], (B, D), jnp.float32)
+        out = ops.rg_lru_scan(a, b, h0, interpret=True)
+        want = ref.rg_lru_scan(a, b, h0)
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+    def test_decay_contracts_state(self):
+        """With b=0 and |a|<1 the state decays monotonically."""
+        B, T, D = 2, 64, 128
+        a = jnp.full((B, T, D), 0.9, jnp.float32)
+        b = jnp.zeros((B, T, D), jnp.float32)
+        h0 = jnp.ones((B, D), jnp.float32)
+        out = np.asarray(ops.rg_lru_scan(a, b, h0, interpret=True))
+        norms = np.abs(out).max(axis=(0, 2))
+        assert (np.diff(norms) < 0).all()
+
+    @settings(max_examples=10, deadline=None)
+    @given(t=st.integers(2, 80), seed=st.integers(0, 2 ** 16))
+    def test_property_any_length(self, t, seed):
+        ks = jax.random.split(jax.random.key(seed), 3)
+        a = jax.random.uniform(ks[0], (2, t, 128), jnp.float32, 0.5, 1.0)
+        b = jax.random.normal(ks[1], (2, t, 128), jnp.float32)
+        h0 = jax.random.normal(ks[2], (2, 128), jnp.float32)
+        out = ops.rg_lru_scan(a, b, h0, interpret=True)
+        want = ref.rg_lru_scan(a, b, h0)
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)

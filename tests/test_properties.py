@@ -1,0 +1,78 @@
+"""Hypothesis property tests on system-level invariants.
+
+The paper's central invariant — identical construction and dynamics for
+ANY process layout — is checked here over randomly drawn grid shapes,
+shard counts, placements and seeds (not just the hand-picked cases in
+test_core_engine.py)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EngineConfig, GridConfig, build, observables, run
+from repro.core import connectivity as C
+from repro.core import topology as T
+
+
+@settings(max_examples=10, deadline=None)
+@given(gx=st.integers(1, 3), gy=st.integers(1, 3),
+       h=st.integers(1, 6), seed=st.integers(0, 2 ** 16),
+       placement=st.sampled_from(["block", "scatter"]))
+def test_connectivity_layout_invariant(gx, gy, h, seed, placement):
+    """The global synapse multiset is identical for every layout."""
+    cfg = GridConfig(grid_x=gx, grid_y=gy, neurons_per_column=40,
+                     synapses_per_neuron=10, seed=seed)
+    h = min(h, cfg.n_neurons)
+
+    def global_set(eng):
+        out = []
+        for sh, t in enumerate(C.build_all_shards(cfg, eng)):
+            gids = T.owned_gids(cfg, sh, eng.n_shards, eng.placement)
+            m = t.valid
+            out += list(zip(t.src_gid[t.src_idx[m]].tolist(),
+                            gids[t.tgt_local[m]].tolist(),
+                            t.j[m].tolist(), t.delay[m].tolist()))
+        return sorted(out)
+
+    ref = global_set(EngineConfig(n_shards=1))
+    assert global_set(EngineConfig(n_shards=h, placement=placement)) == ref
+
+
+@settings(max_examples=6, deadline=None)
+@given(h=st.integers(1, 5), seed=st.integers(0, 1000),
+       placement=st.sampled_from(["block", "scatter"]))
+def test_raster_layout_invariant(h, seed, placement):
+    """Short simulations produce identical rasters for any drawn layout."""
+    cfg = GridConfig(grid_x=2, grid_y=1, neurons_per_column=50,
+                     synapses_per_neuron=16, seed=seed)
+    h = min(h, cfg.n_neurons)
+
+    def sig(eng):
+        spec, plan, state = build(cfg, eng)
+        _, raster, _ = run(spec, plan, state, 0, 60)
+        return observables.raster_signature(np.asarray(raster),
+                                            np.asarray(plan.gid))
+
+    assert sig(EngineConfig(n_shards=h, placement=placement)) == sig(
+        EngineConfig(n_shards=1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), gx=st.integers(1, 4),
+       gy=st.integers(1, 4))
+def test_forward_synapse_counts_exact(seed, gx, gy):
+    """Every neuron projects exactly M synapses; inhibitory ones stay
+    intra-column onto excitatory targets with minimum delay."""
+    cfg = GridConfig(grid_x=gx, grid_y=gy, neurons_per_column=30,
+                     synapses_per_neuron=12, seed=seed)
+    gids = np.arange(cfg.n_neurons)
+    f = C.forward_synapses(cfg, gids)
+    assert f.tgt_gid.shape == (cfg.n_neurons, 12)
+    assert (f.tgt_gid >= 0).all() and (f.tgt_gid < cfg.n_neurons).all()
+    inh = ~T.is_excitatory(cfg, gids)
+    own_col = T.gid_column(cfg, gids)[:, None]
+    tcol = T.gid_column(cfg, f.tgt_gid)
+    assert (tcol[inh] == np.broadcast_to(own_col, tcol.shape)[inh]).all()
+    assert (f.delay[inh] == cfg.delay_min).all()
+    assert (~f.plastic[inh]).all()
+    n_exc_t = T.gid_local_n(cfg, f.tgt_gid)
+    assert (n_exc_t[inh] < cfg.n_exc_per_column).all()
