@@ -4,6 +4,10 @@ import sys
 import time
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+from repro._flags import subprocess_env
 
 
 def run_subprocess(code: str, n_devices: int = 1, timeout: int = 1800,
@@ -12,10 +16,7 @@ def run_subprocess(code: str, n_devices: int = 1, timeout: int = 1800,
     device count at first init, so scaling points need fresh processes —
     this is also what makes the measurement honest: each point pays full
     startup, like an MPI job)."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
-                        + env.get("XLA_FLAGS", "")).strip()
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env = subprocess_env(n_devices, SRC)
     env.update(extra_env or {})
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, env=env, timeout=timeout)

@@ -95,5 +95,16 @@ def weak_scaling(quick: bool = False):
 
 
 if __name__ == "__main__":
-    strong_scaling()
-    weak_scaling()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grid/steps/H for the CI smoke check")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--strong-only", action="store_true")
+    mode.add_argument("--weak-only", action="store_true")
+    args = ap.parse_args()
+    if not args.weak_only:
+        strong_scaling(quick=args.quick)
+    if not args.strong_only:
+        weak_scaling(quick=args.quick)

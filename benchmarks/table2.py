@@ -19,7 +19,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import EngineConfig, GridConfig, build
 from repro.core import engine as E

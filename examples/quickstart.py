@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (EngineConfig, GridConfig, build, engine,
-                        observables, stimulus)
+                        observables)
 
 
 def membrane_trace(spec, plan, state, neuron_ids, steps):
@@ -60,7 +60,7 @@ def main():
 
     rate = observables.mean_rate_hz(raster[:, None], cfg.n_neurons)
     print(f"\nmean firing rate: {rate:.1f} Hz "
-          f"(paper Table 1, single column: ~20 Hz)")
+          "(paper Table 1, single column: ~20 Hz)")
     win = observables.rate_per_window(raster[:, None], cfg.n_neurons, 100)
     print("rate per 100ms window (Hz):",
           " ".join(f"{x:.0f}" for x in win))

@@ -66,7 +66,7 @@ def main():
                                          np.asarray(plan2.gid))
 
     assert sig_a == sig_b, "elastic restart changed the spike raster!"
-    print(f"phase 2: identical rasters on 4-shard continue vs 2-shard "
+    print("phase 2: identical rasters on 4-shard continue vs 2-shard "
           f"scatter restart  (sha256 {sig_a.hex()[:16]}...)  OK")
 
 

@@ -1,0 +1,8 @@
+"""DPSNN-STDP mini-application reproduction (arXiv 1310.8478) on JAX.
+
+Subpackages: `core` (the spiking engine), `dist` (mesh + sharding rules),
+`models`/`train`/`optim`/`serve` (the LM substrate), `launch` (entry
+points), `configs`, `data`, `kernels`.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,32 @@
+"""Stdlib-only env-flag helpers, importable before any jax import.
+
+Kept outside `repro.dist` because that package imports jax at load time;
+launch scripts must be able to mutate XLA_FLAGS first.
+"""
+from __future__ import annotations
+
+import os
+
+
+def force_host_device_count(n: int, current: str | None = None) -> str:
+    """XLA_FLAGS value forcing `n` logical host devices.
+
+    APPENDS to the existing flags: XLA parses duplicated flags last-wins,
+    so the count requested here overrides any ambient CI-level forced
+    device count."""
+    cur = os.environ.get("XLA_FLAGS", "") if current is None else current
+    return f"{cur} --xla_force_host_platform_device_count={n}".strip()
+
+
+def subprocess_env(n_devices: int, src_path: str) -> dict:
+    """Environment for a fresh-interpreter jax subprocess: `n_devices`
+    forced host devices (overriding any ambient forced count) and
+    `src_path` prepended to PYTHONPATH so `repro` imports uninstalled.
+
+    Shared by tests/_mp_helpers.py and benchmarks/_util.py so their
+    subprocess environments cannot drift apart."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = force_host_device_count(
+        n_devices, env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = src_path + os.pathsep + env.get("PYTHONPATH", "")
+    return env

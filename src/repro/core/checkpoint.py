@@ -19,8 +19,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from . import connectivity, engine, topology
-from .params import EngineConfig, GridConfig
+from . import connectivity, engine
 from .engine import ShardPlan, ShardState, SimSpec
 
 

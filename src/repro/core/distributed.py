@@ -1,5 +1,6 @@
 """Distributed DPSNN runtime: the same phase-A/B step as `engine`, but with
-real collectives under `jax.shard_map` over a `cells` mesh axis.
+real collectives under `shard_map` (via `repro.dist.compat`) over a
+`cells` mesh axis.
 
 Spike exchange modes (EngineConfig.exchange):
 
@@ -19,16 +20,18 @@ Spike exchange modes (EngineConfig.exchange):
 """
 from __future__ import annotations
 
-import functools
-from typing import List, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from . import aer, engine, stimulus, topology
 from .engine import ShardPlan, ShardState, SimSpec
+from ..dist import compat as dist_compat
+from ..dist import mesh as dist_mesh
+from ..dist import sharding as dist_sharding
 
 
 def halo_offsets(spec: SimSpec, plan: ShardPlan) -> List[int]:
@@ -51,7 +54,7 @@ def halo_offsets(spec: SimSpec, plan: ShardPlan) -> List[int]:
 
 
 def make_mesh(n_shards: int) -> Mesh:
-    return jax.make_mesh((n_shards,), ("cells",))
+    return dist_mesh.make_snn_mesh(n_shards)
 
 
 def _spiked_src_allgather(spec, plan_gid_all, spiked, src_gid):
@@ -121,11 +124,10 @@ def make_sharded_run(spec: SimSpec, plan: ShardPlan, mesh: Mesh):
     tm_specs = engine.StepTimings(spikes=P(None, "cells"),
                                   arrivals=P(None, "cells"))
 
-    smapped = jax.shard_map(
-        shard_body, mesh=mesh,
+    smapped = dist_compat.shard_map(
+        shard_body, mesh,
         in_specs=(plan_specs, state_specs, P()),
-        out_specs=(state_specs, P(None, "cells"), tm_specs),
-        check_vma=False)
+        out_specs=(state_specs, P(None, "cells"), tm_specs))
 
     @jax.jit
     def run(state, ts):
@@ -141,5 +143,4 @@ def make_sharded_run(spec: SimSpec, plan: ShardPlan, mesh: Mesh):
 
 def shard_put(mesh: Mesh, tree):
     """Place a stacked [H, ...] tree with each shard on its device."""
-    sh = NamedSharding(mesh, P("cells"))
-    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+    return dist_sharding.shard_put(mesh, tree, "cells")

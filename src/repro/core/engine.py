@@ -22,8 +22,7 @@ and under `shard_map` (real collectives — repro.core.distributed).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, List, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

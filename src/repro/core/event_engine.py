@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import connectivity, engine, stimulus, topology
+from . import connectivity, engine, stimulus
 from .engine import NEG_TIME, ShardPlan, ShardState, SimSpec
 
 

@@ -8,8 +8,6 @@ so cross-entropy has learnable signal (quickstart trains visibly below the
 unigram entropy) while requiring no external data."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -1,0 +1,28 @@
+"""repro.dist — the one mesh-and-spec layer shared by every workload.
+
+The SNN engine (space-parallel `cells` axis), the LM stack
+(`data`/`model`/`pod` axes) and the dry-run driver all build meshes and
+partition specs through this package:
+
+  sharding — logical constraint application (`shard`), divisibility-aware
+      rule fitting (`_fit`) and path+shape spec inference
+      (`infer_param_spec` / `infer_cache_spec` / `infer_batch_spec`),
+      plus the `use_mesh` context that binds a mesh to the former.
+  mesh — mesh constructors (production 16x16 / 2x16x16, flat SNN `cells`).
+  compat — `shard_map` across the jax versions we support (the keyword
+      for replication checking moved between releases).
+"""
+from . import compat, mesh, sharding
+from .compat import shard_map
+from .mesh import make_production_mesh, make_snn_mesh
+from .sharding import (NamedSharding, P, axis_size, infer_batch_spec,
+                       infer_cache_spec, infer_param_spec, shard, shard_put,
+                       tree_shardings, use_mesh)
+
+__all__ = [
+    "compat", "mesh", "sharding", "shard_map",
+    "make_production_mesh", "make_snn_mesh",
+    "NamedSharding", "P", "axis_size", "infer_batch_spec",
+    "infer_cache_spec", "infer_param_spec", "shard", "shard_put",
+    "tree_shardings", "use_mesh",
+]

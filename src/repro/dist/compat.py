@@ -1,0 +1,27 @@
+"""shard_map across jax versions.
+
+jax moved `shard_map` from `jax.experimental.shard_map` (keyword
+`check_rep`) to top-level `jax.shard_map` (keyword `check_vma`).  Every
+caller in this repo goes through `dist.shard_map(f, mesh, in_specs,
+out_specs, check=...)` so the version split lives in exactly one place.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map).parameters
+             else "check_rep")
+
+
+def shard_map(f, mesh, in_specs, out_specs, *, check: bool = False):
+    """Version-stable `shard_map`; `check` maps onto check_vma/check_rep."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: check})

@@ -1,0 +1,286 @@
+"""Sharding rules: logical constraint application + path/shape spec
+inference.
+
+Two layers, one mesh:
+
+1. **Logical axes** — model code names *logical* axes ("batch", "experts",
+   "cells"); `shard(x, *axes)` translates them to whatever mesh axes are
+   bound by `use_mesh` and applies a `with_sharding_constraint`.  Outside a
+   bound mesh it is an identity, so the same model runs unsharded on one
+   device, under GSPMD on a production mesh, and inside `shard_map` bodies
+   (which bind no mesh) without branching.
+
+2. **Spec inference** — whole trees (params, optimizer state, KV caches,
+   token batches) are placed by path+shape rules: `infer_param_spec`,
+   `infer_cache_spec`, `infer_batch_spec`, each built on `_fit`, which
+   tries candidate rules in order and keeps the first whose every
+   mesh-present axis divides its dimension (axes absent from the mesh are
+   dropped silently — the same rules serve the 2x16x16 multi-pod mesh, the
+   16x16 pod, and the tiny CI meshes).
+
+The divisibility-or-fallback structure is what keeps one rule table
+serving every architecture in `repro.configs`: a 151936-vocab embedding
+vocab-shards cleanly over 16 chips while a 122753-vocab one falls back to
+sharding d_model over both axes, with no per-model configuration.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from contextvars import ContextVar
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "NamedSharding", "P", "axis_size", "get_mesh", "infer_batch_spec",
+    "infer_cache_spec", "infer_param_spec", "shard", "shard_put",
+    "tree_shardings", "use_mesh", "LOGICAL_AXES",
+]
+
+# ---------------------------------------------------------------------------
+# mesh binding
+# ---------------------------------------------------------------------------
+
+_ACTIVE_MESH: ContextVar[Optional[Mesh]] = ContextVar("repro_active_mesh",
+                                                      default=None)
+
+# logical name -> physical mesh axes, in sharding-priority order.  A
+# logical axis maps onto whichever of its physical axes exist in the bound
+# mesh (so "batch" spans pod+data on the multi-pod mesh and just data on a
+# single pod).
+LOGICAL_AXES = {
+    "batch": ("pod", "data"),
+    "data": ("data",),
+    "model": ("model",),
+    "experts": ("model",),   # expert-parallelism rides the model axis
+    "seq": ("model",),       # sequence sharding (long-context caches)
+    "cells": ("cells",),     # SNN space-parallel axis
+}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Bind `mesh` for `shard`/`axis_size` in this context."""
+    token = _ACTIVE_MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH.reset(token)
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH.get()
+
+
+def axis_size(logical: str) -> int:
+    """Product of the bound-mesh sizes of `logical`'s physical axes (1 when
+    no mesh is bound or none of its axes exist)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return 1
+    names = LOGICAL_AXES.get(logical, (logical,))
+    return math.prod(mesh.shape[a] for a in names if a in mesh.shape)
+
+
+# ---------------------------------------------------------------------------
+# logical constraint application
+# ---------------------------------------------------------------------------
+
+
+def _greedy_entry(dim: int, logical: Optional[str], mesh: Mesh):
+    """Physical spec entry for one dimension: keep each mapped axis while
+    the cumulative shard count still divides `dim` (best-effort — a
+    constraint must never make a program uncompilable)."""
+    if logical is None:
+        return None
+    kept, prod = [], 1
+    for a in LOGICAL_AXES.get(logical, (logical,)):
+        if a in mesh.shape and dim % (prod * mesh.shape[a]) == 0:
+            kept.append(a)
+            prod *= mesh.shape[a]
+    if not kept:
+        return None
+    return kept[0] if len(kept) == 1 else tuple(kept)
+
+
+def shard(x, *axes):
+    """Constrain `x`'s layout along logical `axes` (one entry per dim,
+    None = unconstrained).  Identity when no mesh is bound — single-device
+    smoke runs and `shard_map` bodies skip it entirely."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"shard: got {len(axes)} axes for rank-{x.ndim} "
+                         f"array (shape {x.shape})")
+    entries = [_greedy_entry(d, a, mesh) for d, a in zip(x.shape, axes)]
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+# ---------------------------------------------------------------------------
+# rule fitting
+# ---------------------------------------------------------------------------
+
+Rule = Tuple[Any, ...]          # per-dim entries: None | axis | (axes...)
+
+# physical building blocks for the rule tables
+FSDP = ("pod", "data")          # fully-sharded-data-parallel axes
+TP = "model"                    # tensor/expert-parallel axis
+ALL = ("pod", "data", "model")  # "shard over everything" fallback
+
+
+def _entry_axes(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def _apply_rule(shape: Sequence[int], rule: Rule, mesh: Mesh):
+    """Rule -> spec, or None if any mesh-present axis fails divisibility.
+
+    Axes the mesh doesn't have are dropped (not a failure): the candidate
+    `(("pod","data"), "model")` degrades to `P(None, "model")` on a
+    pod-less mesh.  Axes the mesh has must divide their dim or the whole
+    rule is rejected so `_fit` can try the next candidate — partial
+    application would silently produce a different layout than the rule
+    author intended."""
+    if len(rule) != len(shape):
+        return None
+    out = []
+    for dim, entry in zip(shape, rule):
+        names = [a for a in _entry_axes(entry) if a in mesh.shape]
+        if names:
+            if dim % math.prod(mesh.shape[a] for a in names) != 0:
+                return None
+            out.append(names[0] if len(names) == 1 else tuple(names))
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _fit(shape: Sequence[int], candidate_rules: Sequence[Rule],
+         mesh: Mesh) -> P:
+    """First candidate rule that fits `shape` on `mesh` (see
+    `_apply_rule`); fully replicated when none fits."""
+    for rule in candidate_rules:
+        spec = _apply_rule(shape, rule, mesh)
+        if spec is not None:
+            return spec
+    return P(*(None,) * len(shape))
+
+
+# ---------------------------------------------------------------------------
+# spec inference: params / caches / batches
+# ---------------------------------------------------------------------------
+
+
+def infer_param_spec(path: str, shape: Sequence[int], mesh: Mesh) -> P:
+    """Parameter placement by path + shape.
+
+    - embeddings: vocab on TP, d_model on FSDP; odd vocab falls back to
+      d_model over every axis (the d-dim fallback).
+    - stacked layer weights [L, d_in, d_out]: d_in on FSDP, d_out on TP.
+    - expert weights [L, E, d, f]: experts on TP (expert-parallel), f on
+      FSDP; odd expert counts fall back to data-local experts with f on TP.
+    - vectors (norm scales, biases): replicated.
+    """
+    nd = len(shape)
+    leaf = path.rsplit("/", 1)[-1]
+    if nd <= 1:
+        return P(*(None,) * nd)
+    if "embed" in leaf and nd == 2:
+        if shape[0] >= shape[1]:                     # (vocab, d)
+            rules = [(TP, FSDP), (None, ALL), (None, None)]
+        else:                                        # (d, vocab)
+            rules = [(FSDP, TP), (ALL, None), (None, None)]
+        return _fit(shape, rules, mesh)
+    if nd == 4:                                      # (L, E, d, f) experts
+        return _fit(shape, [(None, TP, None, FSDP),
+                            (None, None, None, TP),
+                            (None, None, None, FSDP),
+                            (None,) * 4], mesh)
+    if nd == 3:                                      # (L, d_in, d_out)
+        return _fit(shape, [(None, FSDP, TP),
+                            (None, None, TP),
+                            (None, None, ALL),
+                            (None,) * 3], mesh)
+    # plain 2-D dense (un-stacked: routers, shared experts, heads)
+    return _fit(shape, [(FSDP, TP), (None, TP), (None, ALL),
+                        (None, None)], mesh)
+
+
+def infer_cache_spec(path: str, shape: Sequence[int], mesh: Mesh) -> P:
+    """KV/recurrent-state placement: batch on FSDP, sequence on TP.
+
+    Sequence sharding carries the long-context decode case: at batch=1
+    nothing divides the FSDP axes, so batch falls back to replicated and
+    the 512k-deep cache still spreads over the TP axis."""
+    nd = len(shape)
+    if nd == 5:                                      # (L, B, S, H, D)
+        rules = [(None, FSDP, TP, None, None),
+                 (None, None, TP, None, None),
+                 (None,) * 5]
+    elif nd == 4:                                    # (B, S, H, D)
+        rules = [(FSDP, TP, None, None),
+                 (None, TP, None, None),
+                 (None,) * 4]
+    elif nd == 3:                                    # (B, S, d) enc_out /
+        rules = [(FSDP, None, None), (None,) * 3]    # recurrent state
+    elif nd == 2:                                    # (B, d)
+        rules = [(FSDP, None), (None, None)]
+    else:
+        rules = [(None,) * nd]
+    return _fit(shape, rules, mesh)
+
+
+def infer_batch_spec(name: str, shape: Sequence[int], mesh: Mesh) -> P:
+    """Input batches: leading (batch) dim over FSDP, rest replicated."""
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    return _fit(shape, [(FSDP,) + (None,) * (nd - 1), (None,) * nd], mesh)
+
+
+# ---------------------------------------------------------------------------
+# whole-tree placement
+# ---------------------------------------------------------------------------
+
+
+def _path_str(key_path) -> str:
+    parts = []
+    for k in key_path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(str(k.name))
+        elif isinstance(k, jax.tree_util.FlattenedIndexKey):
+            parts.append(str(k.key))
+        else:
+            parts.append(str(k))
+    return "/" + "/".join(parts)
+
+
+def tree_shardings(tree, mesh: Mesh,
+                   infer_fn: Callable[[str, Sequence[int], Mesh], P]):
+    """Map `infer_fn(path, shape, mesh)` over a tree of arrays (or
+    ShapeDtypeStructs), returning a matching tree of NamedShardings."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(mesh, infer_fn(_path_str(kp),
+                                                      leaf.shape, mesh)),
+        tree)
+
+
+def shard_put(mesh: Mesh, tree, axis: str = "cells"):
+    """Place a stacked [H, ...] tree with each shard on its device of the
+    `axis` mesh axis (the SNN engine's plan/state layout)."""
+    sh = NamedSharding(mesh, P(axis))
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)

@@ -6,7 +6,6 @@ kernel test suite to validate against ref.py).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

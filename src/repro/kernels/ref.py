@@ -5,7 +5,7 @@ when `use_pallas=False` (this container) and to the kernels on TPU.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,5 @@
+"""Entry points: train, dryrun, snn, serve (run via `python -m`).
+
+No launcher is imported eagerly — several set environment variables that
+must precede jax initialization when run as scripts.
+"""

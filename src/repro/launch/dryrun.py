@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", "")).strip()
-
 """Multi-pod dry run (deliverable e).
 
 For every (architecture x input shape) cell, lower + compile the production
@@ -9,15 +5,22 @@ step on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh, print
 memory_analysis / cost_analysis, and extract per-device collective bytes
 from the optimized HLO for the roofline (EXPERIMENTS.md §Roofline).
 
-The two os.environ lines above run before ANY other import: jax locks the
-device count at first init.
-
 Usage:
   python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
   python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
   python -m repro.launch.dryrun --snn          # the paper's own engine
 Results are appended as JSON lines to results/dryrun/<cell>.json.
 """
+import os
+
+if __name__ == "__main__":
+    # Only the CLI entry forces 512 host devices; importing this module
+    # (tests, smaller meshes) must leave jax device state alone.  This runs
+    # before ANY jax import below: jax locks the count at first init.
+    # `repro._flags` is deliberately jax-free so this import is safe here.
+    from repro._flags import force_host_device_count
+    os.environ["XLA_FLAGS"] = force_host_device_count(512)
+
 import argparse
 import json
 import re
@@ -27,10 +30,10 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCH_IDS, get_config, valid_cells
+from repro.configs import valid_cells
 from repro.dist import sharding as shd
 from repro.launch import input_specs as ispec
-from repro.launch.mesh import make_production_mesh, make_snn_mesh
+from repro.launch.mesh import make_production_mesh
 
 RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                           "results", "dryrun")
@@ -85,6 +88,15 @@ def collective_bytes(hlo_text: str):
     return out
 
 
+def _xla_cost_dict(compiled) -> dict:
+    """`compiled.cost_analysis()` returns a per-partition list of dicts on
+    older jax and a plain dict on newer; normalize to one dict."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.size
@@ -110,7 +122,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
                       + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
     rec["memory"]["per_device_total"] = int(per_device_hbm)
 
-    cost = compiled.cost_analysis() or {}
+    cost = _xla_cost_dict(compiled)
     rec["xla_cost"] = dict(
         flops_per_device=float(cost.get("flops", 0.0)),
         bytes_accessed_per_device=float(cost.get("bytes accessed", 0.0)))
@@ -143,7 +155,6 @@ def run_snn(multi_pod: bool, exchange: str = "halo") -> dict:
     column per chip (512 columns = 512k neurons, ~102M synapses)."""
     from repro.core import EngineConfig, GridConfig
     from repro.core import distributed as D
-    from repro.core import engine as E
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     n = mesh.size
@@ -167,7 +178,7 @@ def run_snn(multi_pod: bool, exchange: str = "halo") -> dict:
     rec["memory"] = dict(
         argument_bytes=int(mem.argument_size_in_bytes),
         temp_bytes=int(mem.temp_size_in_bytes))
-    cost = compiled.cost_analysis() or {}
+    cost = _xla_cost_dict(compiled)
     rec["xla_cost"] = dict(flops_per_device=float(cost.get("flops", 0.0)),
                            bytes_accessed_per_device=float(
                                cost.get("bytes accessed", 0.0)))
@@ -192,11 +203,9 @@ def run_snn(multi_pod: bool, exchange: str = "halo") -> dict:
 def _snn_abstract(cfg, eng):
     """Build ONE shard to get exact static shapes, then build abstract
     stacked plan/state (no 512-shard host build)."""
-    import numpy as np
     from repro.core import connectivity as C
-    from repro.core import engine as E
 
-    one = EngineConfigShard = C.build_shard(cfg, eng, 0)
+    one = C.build_shard(cfg, eng, 0)
     e_cap = C._round_up(int(one.n_valid * 1.08), 128)
     s_cap = C._round_up(one.src_gid.shape[0], 8)
     n_cap = -(-cfg.n_neurons // eng.n_shards)
@@ -240,7 +249,7 @@ def _snn_lower(spec, mesh, plan_abs, state_abs):
         state_abs)
 
     # mirror make_sharded_run but lower with abstract plan as an ARGUMENT
-    from repro.core import aer, engine, stimulus
+    from repro.core import engine, stimulus
     spec_ = spec
     stim_k = stimulus.stim_key(spec.cfg)
     H = spec.eng.n_shards
@@ -274,10 +283,11 @@ def _snn_lower(spec, mesh, plan_abs, state_abs):
     pspec = P("cells")
     plan_specs = jax.tree.map(lambda _: pspec, plan_abs)
     state_specs = ShardState(*([pspec] * len(ShardState._fields)))
-    smapped = jax.shard_map(shard_body, mesh=mesh,
-                            in_specs=(plan_specs, state_specs, P()),
-                            out_specs=(state_specs, P(None, "cells")),
-                            check_vma=False)
+    from repro.dist import compat as dist_compat
+    smapped = dist_compat.shard_map(
+        shard_body, mesh,
+        in_specs=(plan_specs, state_specs, P()),
+        out_specs=(state_specs, P(None, "cells")))
     ts = jax.ShapeDtypeStruct((100,), jnp.int32)
     lowered = jax.jit(smapped).lower(plan_abs, state_abs, ts)
     return None, lowered

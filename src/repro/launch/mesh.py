@@ -1,20 +1,7 @@
-"""Production mesh construction.
-
-A FUNCTION, not a module-level constant: importing this module never
-touches jax device state (the dry-run driver must set XLA_FLAGS before any
-jax initialization)."""
+"""Mesh constructors — moved to `repro.dist.mesh`; re-exported here so
+launch scripts and tests keep a stable import path."""
 from __future__ import annotations
 
-import jax
+from repro.dist.mesh import make_production_mesh, make_snn_mesh
 
-
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def make_snn_mesh(n_cells: int):
-    """The SNN engine is space-parallel only: one flat 'cells' axis."""
-    return jax.make_mesh((n_cells,), ("cells",))
+__all__ = ["make_production_mesh", "make_snn_mesh"]

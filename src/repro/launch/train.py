@@ -50,7 +50,7 @@ def main():
     def build_and_run():
         params = lm.init_params(cfg, jax.random.key(0))
         print(f"[train] {cfg.name}: {lm.param_count(params)/1e6:.1f}M "
-              f"params")
+              "params")
         state = create(params, use_error_feedback=args.compress_grads)
         tr = Trainer(step, state, ckpt_dir=args.ckpt_dir)
         start = tr.maybe_resume()

@@ -10,8 +10,7 @@ Layouts:
 """
 from __future__ import annotations
 
-import math
-from typing import NamedTuple, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..dist.sharding import shard
-from . import attention, common, transformer
+from . import common, transformer
 
 
 def _dtype(cfg: ModelConfig):

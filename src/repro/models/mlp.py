@@ -1,9 +1,7 @@
 """Dense MLP blocks (SwiGLU / GELU / squared-ReLU)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
-from ..configs.base import ModelConfig
 from . import common
 
 

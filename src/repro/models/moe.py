@@ -14,12 +14,12 @@ GSPMD, again matching the paper's two-step MPI_Alltoallv structure.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig, MoEConfig
+from ..configs.base import MoEConfig
 from ..dist.sharding import axis_size, shard
 from . import common
 

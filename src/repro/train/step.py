@@ -6,8 +6,7 @@ execution and for the multi-pod dry-run (lower/compile on ShapeDtypeStructs).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,13 +8,14 @@ import subprocess
 import sys
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+from repro._flags import subprocess_env
 
 
 def run_with_devices(code: str, n_devices: int, timeout: int = 600) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
-                        + env.get("XLA_FLAGS", "")).strip()
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env = subprocess_env(n_devices, SRC)
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, env=env, timeout=timeout)
     if out.returncode != 0:

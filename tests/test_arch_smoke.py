@@ -118,7 +118,6 @@ def test_decode_matches_forward(arch):
 
 def test_param_counts_match_published():
     """Full configs must land near the published parameter counts."""
-    import math
 
     def count(cfg):
         d, H, Hkv, dh, f, V, L = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,

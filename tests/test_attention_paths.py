@@ -59,7 +59,6 @@ def test_visible_pair_count_window():
 
 def test_ring_cache_decode_equals_linear():
     """Ring-buffer window cache must reproduce full-cache decode."""
-    import functools
     from repro.configs import get_smoke_config
     from repro.models import lm
     cfg = get_smoke_config("gemma3-27b")       # has la layers, window=64

@@ -1,0 +1,41 @@
+"""Distributed determinism: the paper's Table 1 invariant as a pytest.
+
+Both exchange modes ('halo' sparse AER delivery and 'allgather' dense
+masks) must produce bit-identical raster signatures at every shard count
+H in {1, 2, 4}.  One subprocess with 4 forced host devices runs all six
+(H, exchange) points; the benchmark asserts the same invariant at larger
+scale outside pytest (benchmarks/scaling.py)."""
+import pytest
+
+from _mp_helpers import run_with_devices
+
+_CODE = """
+import numpy as np
+from repro.core import EngineConfig, GridConfig, build, observables
+from repro.core import distributed as D
+
+cfg = GridConfig(grid_x=2, grid_y=2, neurons_per_column=80,
+                 synapses_per_neuron=30, seed=11)
+sigs = {}
+for H in (1, 2, 4):
+    for exchange in ("halo", "allgather"):
+        eng = EngineConfig(n_shards=H, exchange=exchange)
+        spec, plan, state = build(cfg, eng)
+        mesh = D.make_mesh(H)
+        plan_d = D.shard_put(mesh, plan)
+        state_d = D.shard_put(mesh, state)
+        runner = D.make_sharded_run(spec, plan_d, mesh)
+        _, raster, _ = runner(state_d, 0, 80)
+        sigs[(H, exchange)] = observables.raster_signature(
+            np.asarray(raster), np.asarray(plan.gid))
+
+vals = set(sigs.values())
+assert len(vals) == 1, f'raster signatures diverge: {sigs}'
+print('DETERMINISM OK', sorted(sigs)[0], len(sigs))
+"""
+
+
+@pytest.mark.slow
+def test_rasters_identical_across_H_and_exchange():
+    out = run_with_devices(_CODE, 4, timeout=900)
+    assert "DETERMINISM OK" in out

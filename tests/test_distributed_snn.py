@@ -1,9 +1,8 @@
 """shard_map runtime: real collectives must reproduce the vmap reference
 exactly, for both exchange modes, and the halo schedule must be sparse."""
-import numpy as np
 import pytest
 
-from repro.core import EngineConfig, GridConfig, build, observables, run
+from repro.core import EngineConfig, GridConfig, build
 from repro.core import distributed as D
 
 from _mp_helpers import run_with_devices

@@ -2,7 +2,6 @@
 mesh (8 fake devices) with reduced configs — fast enough for CI, proves the
 launch plumbing end-to-end.  The production 512-device matrix runs via
 `python -m repro.launch.dryrun --all` (results in results/dryrun/)."""
-import json
 
 import pytest
 

@@ -1,7 +1,6 @@
 """Event-driven delivery backend: equivalence vs the dense engine and
 AER-style saturation accounting."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

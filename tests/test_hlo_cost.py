@@ -2,7 +2,6 @@
 programs whose true costs are known analytically."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_cost

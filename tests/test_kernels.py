@@ -4,6 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(installed via the [test] extra in CI)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.engine import NEG_TIME

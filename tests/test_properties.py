@@ -6,6 +6,9 @@ shard counts, placements and seeds (not just the hand-picked cases in
 test_core_engine.py)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(installed via the [test] extra in CI)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import EngineConfig, GridConfig, build, observables, run

@@ -4,7 +4,6 @@ via mesh_utils-style fakes — here we just need axis names/sizes, so we use
 a 1-device mesh and check the *fallback* logic, plus a fake-shaped mesh via
 subprocess for the 256-way rules)."""
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
