@@ -1,35 +1,9 @@
-import os
-import subprocess
-import sys
-import time
+"""Back-compat shim: the benchmark utilities live in the installable
+package now (`repro.bench.subproc` / `repro.bench.timing`).  The old
+sys.path bootstrap is gone — install with `pip install -e .`, or run
+uninstalled with `PYTHONPATH=src` (pytest alone bootstraps sys.path via
+tests/conftest.py)."""
+from repro.bench.subproc import SRC, run_subprocess
+from repro.bench.timing import Timer
 
-SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
-if SRC not in sys.path:
-    sys.path.insert(0, SRC)
-
-from repro._flags import subprocess_env
-
-
-def run_subprocess(code: str, n_devices: int = 1, timeout: int = 1800,
-                   extra_env=None) -> str:
-    """Run `code` in a fresh interpreter with n host devices (jax locks the
-    device count at first init, so scaling points need fresh processes —
-    this is also what makes the measurement honest: each point pays full
-    startup, like an MPI job)."""
-    env = subprocess_env(n_devices, SRC)
-    env.update(extra_env or {})
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=timeout)
-    if out.returncode != 0:
-        raise RuntimeError(f"bench subprocess failed:\n{out.stdout}\n"
-                           f"{out.stderr}")
-    return out.stdout
-
-
-class Timer:
-    def __enter__(self):
-        self.t0 = time.time()
-        return self
-
-    def __exit__(self, *a):
-        self.s = time.time() - self.t0
+__all__ = ["SRC", "run_subprocess", "Timer"]

@@ -1,67 +1,8 @@
-"""Beyond-paper ablation: dense O(E) masked delivery vs event-driven
-O(spikes x fan) delivery, across activity regimes.
+"""Thin entry for the dense-vs-event delivery ablation; the implementation
+lives in `repro.bench.suites.event_vs_dense`."""
+from repro.bench.suites.event_vs_dense import bench, run_suite
 
-The paper's model is event-driven (on a CPU cluster that is the only
-sensible choice); the dense formulation is the TPU-idiomatic one.  This
-benchmark measures the CPU wall-clock crossover by varying the thalamic
-drive (lower stim -> sparser activity -> event backend advantage grows).
-"""
-from __future__ import annotations
-
-import json
-import time
-
-import jax
-import numpy as np
-
-from repro.core import EngineConfig, GridConfig, observables
-from repro.core import engine as E
-from repro.core import event_engine as EV
-
-
-def bench(quick: bool = False):
-    npc = 250 if quick else 500
-    steps = 100 if quick else 200
-    rows = []
-    for stim in (1, 0):          # events/ms/column: normal vs silent-ish
-        cfg = GridConfig(grid_x=2, grid_y=2, neurons_per_column=npc,
-                         synapses_per_neuron=50, seed=5,
-                         stim_events_per_ms_per_column=stim)
-        eng = EngineConfig(n_shards=1)
-
-        spec, plan, dstate = E.build(cfg, eng)
-        run_d = jax.jit(lambda s: E.run(spec, plan, s, 0, steps))
-        _, raster_d, _ = run_d(dstate)
-        jax.block_until_ready(raster_d)
-        t0 = time.time()
-        _, raster_d, _ = run_d(dstate)
-        jax.block_until_ready(raster_d)
-        dense_s = time.time() - t0
-
-        spec2, plan2, eplan, estate = EV.build(cfg, eng)
-        run_e = jax.jit(lambda s: EV.run(spec2, plan2, eplan, s, 0, steps))
-        _, raster_e = run_e(estate)
-        jax.block_until_ready(raster_e)
-        t0 = time.time()
-        st2, raster_e = run_e(estate)
-        jax.block_until_ready(raster_e)
-        event_s = time.time() - t0
-
-        sig_d = observables.raster_signature(np.asarray(raster_d),
-                                             np.asarray(plan.gid))
-        sig_e = observables.raster_signature(np.asarray(raster_e),
-                                             np.asarray(plan2.gid))
-        rate = observables.mean_rate_hz(np.asarray(raster_d),
-                                        cfg.n_neurons)
-        row = dict(stim_per_ms=stim, rate_hz=round(rate, 1),
-                   dense_s=round(dense_s, 3), event_s=round(event_s, 3),
-                   speedup=round(dense_s / max(event_s, 1e-9), 2),
-                   identical_rasters=bool(sig_d == sig_e),
-                   saturated=int(np.asarray(st2.sat).sum()))
-        rows.append(row)
-        print("[event_vs_dense]", json.dumps(row), flush=True)
-    return rows
-
+__all__ = ["bench", "run_suite"]
 
 if __name__ == "__main__":
     bench()

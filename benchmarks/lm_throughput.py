@@ -1,63 +1,8 @@
-"""LM-side micro-benchmarks: train tokens/s and decode tokens/s on CPU for
-a reduced config (the framework half of the system; TPU projections come
-from the roofline, not from CPU wall-time)."""
-from __future__ import annotations
+"""Thin entry for the LM train/decode micro-benchmarks; the implementation
+lives in `repro.bench.suites.lm_throughput`."""
+from repro.bench.suites.lm_throughput import bench, run_suite
 
-import json
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_smoke_config
-from repro.data import pipeline
-from repro.models import lm
-from repro.optim import schedules
-from repro.train import step as step_mod
-from repro.train.train_state import create
-
-
-def bench(arch: str = "qwen3-0.6b", steps: int = 10, batch: int = 8,
-          seq: int = 128, quick: bool = False):
-    if quick:
-        steps, batch, seq = 5, 4, 64
-    cfg = get_smoke_config(arch)
-    params = lm.init_params(cfg, jax.random.key(0))
-    state = create(params)
-    step = jax.jit(step_mod.make_train_step(
-        cfg, lr_schedule=schedules.cosine(3e-4, 10, 1000)))
-    data = iter(pipeline.Batcher(cfg, batch, seq, seed=1))
-
-    b = next(data)
-    state, m = step(state, b)                   # compile
-    jax.block_until_ready(m["loss"])
-    t0 = time.time()
-    for _ in range(steps):
-        state, m = step(state, next(data))
-    jax.block_until_ready(m["loss"])
-    wall = time.time() - t0
-    row = dict(kind="train", arch=arch, steps=steps,
-               tokens_per_s=int(steps * batch * seq / wall),
-               wall_s=round(wall, 2), final_loss=round(float(m["loss"]), 3))
-    print("[lm]", json.dumps(row), flush=True)
-
-    # decode throughput
-    cache = lm.init_cache(cfg, batch, 64)
-    dstep = jax.jit(lambda c, t: lm.decode_step(cfg, params, c, t))
-    tok = jnp.ones((batch, 1), jnp.int32)
-    _, cache = dstep(cache, tok)               # compile
-    t0 = time.time()
-    n = 20 if quick else 50
-    for _ in range(n):
-        lg, cache = dstep(cache, tok)
-        tok = lg.argmax(-1).astype(jnp.int32)
-    jax.block_until_ready(tok)
-    wall = time.time() - t0
-    row2 = dict(kind="decode", arch=arch,
-                tokens_per_s=int(n * batch / wall), wall_s=round(wall, 2))
-    print("[lm]", json.dumps(row2), flush=True)
-    return [row, row2]
-
+__all__ = ["bench", "run_suite"]
 
 if __name__ == "__main__":
     bench()

@@ -1,115 +1,10 @@
-"""Roofline report: reads results/dryrun/*.json (written by
-repro.launch.dryrun) and renders the per-(arch x shape x mesh) three-term
-table for EXPERIMENTS.md §Roofline, including MODEL_FLOPS / HLO_FLOPs
-usefulness ratios."""
-from __future__ import annotations
+"""Thin entry for the roofline report; the implementation lives in
+`repro.bench.suites.roofline`."""
+from repro.bench.suites.roofline import (load_records, model_flops,
+                                         model_params, report, run_suite)
 
-import glob
-import json
-import os
-
-from repro.configs import get_config, shape_by_name
-
-RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
-                          "dryrun")
-
-
-def model_params(cfg) -> tuple:
-    """(total, active) parameter counts from the config (analytic)."""
-    d, H, Hkv, dh, f, V = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
-                           cfg.head_dim, cfg.d_ff, cfg.vocab_size)
-    tot = act = V * d * (1 if cfg.tie_embeddings else 2)
-    for (mixer, mlp) in cfg.layers:
-        if mixer in ("ga", "la", "bi", "xa"):
-            a = d * H * dh + 2 * d * Hkv * dh + H * dh * d
-            a *= 2 if mixer == "xa" else 1
-        elif mixer == "rg":
-            dr = cfg.rg_lru_width or d
-            a = 2 * d * dr + 2 * dr * dr + dr * d
-        else:
-            a = 5 * d * d
-        tot += a
-        act += a
-        if mlp == "dense":
-            m = d * f * (3 if cfg.act == "swiglu" else 2)
-            tot += m
-            act += m
-        elif mlp == "moe":
-            mo = cfg.moe
-            per = mo.d_ff_expert * d * (3 if cfg.act == "swiglu" else 2)
-            tot += mo.n_experts * per
-            act += mo.top_k * per
-            if mo.shared_expert:
-                tot += per
-                act += per
-        elif mlp == "cmix":
-            m = d * f * 2 + d * d
-            tot += m
-            act += m
-    if cfg.family == "encdec":
-        a = (d * H * dh + 2 * d * Hkv * dh + H * dh * d
-             + d * f * (3 if cfg.act == "swiglu" else 2))
-        tot += cfg.n_encoder_layers * a
-        act += cfg.n_encoder_layers * a
-    return tot, act
-
-
-def model_flops(arch: str, shape_name: str) -> float:
-    """6*N_active*D for train; 2*N_active per generated token for decode;
-    2*N_active*T for prefill."""
-    cfg = get_config(arch)
-    sh = shape_by_name(shape_name)
-    _, act = model_params(cfg)
-    tokens = sh.global_batch * sh.seq_len
-    if sh.kind == "train":
-        return 6.0 * act * tokens
-    if sh.kind == "prefill":
-        return 2.0 * act * tokens
-    return 2.0 * act * sh.global_batch          # decode: 1 new token/seq
-
-
-def load_records():
-    recs = []
-    for f in sorted(glob.glob(os.path.join(RESULT_DIR, "*.json"))):
-        with open(f) as fh:
-            recs.append(json.load(fh))
-    return recs
-
-
-def report(single_pod_only: bool = False):
-    rows = []
-    for r in load_records():
-        if single_pod_only and r.get("multi_pod"):
-            continue
-        rl = r.get("roofline", {})
-        chips = r["chips"]
-        arch, shape = r["arch"], r["shape"]
-        try:
-            mf = model_flops(arch, shape)
-        except Exception:
-            mf = None
-        hlo_total = r["cost"]["flops_per_device"] * chips
-        useful = (mf / hlo_total) if (mf and hlo_total) else None
-        dom = rl.get("dominant", "?")
-        bound_s = max(rl.get("compute_s", 0), rl.get("memory_s", 0),
-                      rl.get("collective_s", 0))
-        frac = (rl.get("compute_s", 0) / bound_s) if bound_s else 0
-        row = dict(arch=arch, shape=shape,
-                   mesh="2x16x16" if r["multi_pod"] else "16x16",
-                   compute_s=rl.get("compute_s"),
-                   memory_s=rl.get("memory_s"),
-                   collective_s=rl.get("collective_s"),
-                   dominant=dom,
-                   mem_gb_per_dev=round(
-                       r["memory"].get("per_device_total", 0) / 1e9, 2)
-                   if "per_device_total" in r.get("memory", {}) else None,
-                   model_flops=mf, hlo_flops_total=hlo_total,
-                   useful_flop_frac=round(useful, 3) if useful else None,
-                   roofline_frac=round(frac, 3))
-        rows.append(row)
-        print("[roofline]", json.dumps(row), flush=True)
-    return rows
-
+__all__ = ["load_records", "model_flops", "model_params", "report",
+           "run_suite"]
 
 if __name__ == "__main__":
     report()

@@ -1,16 +1,19 @@
-"""Benchmark orchestrator: one benchmark per paper table/figure + the
-framework-side LM micro-benchmarks + the roofline report (if dry-run
-results exist).
+"""Benchmark orchestrator (back-compat entry): delegates to the
+`repro.bench` CLI.
 
   python -m benchmarks.run            # full (CPU-sized) suite
   python -m benchmarks.run --quick    # CI-sized
+
+Prefer `python -m repro.bench run|compare|list` directly — it also writes
+machine-readable BENCH_<name>.json reports and gates against the
+committed baselines under benchmarks/baselines/.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import sys
-import traceback
+
+from repro.bench import cli, registry
 
 
 def main():
@@ -18,44 +21,13 @@ def main():
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-scaling", action="store_true",
                     help="skip the subprocess scaling points")
+    ap.add_argument("--out", default=cli.DEFAULT_OUT)
     args = ap.parse_args()
 
-    results = {}
-    failures = []
-
-    def section(name, fn):
-        print(f"\n===== {name} =====", flush=True)
-        try:
-            results[name] = fn()
-        except Exception as e:
-            failures.append(name)
-            print(f"[run] {name} FAILED: {e}", flush=True)
-            traceback.print_exc()
-
-    from . import (event_vs_dense, lm_throughput, roofline, scaling,
-                   table1, table2)
-
-    section("table1_sizes_and_rates",
-            lambda: table1.bench(quick=args.quick))
-    section("table2_phase_breakdown",
-            lambda: table2.bench(quick=args.quick))
-    section("event_vs_dense_delivery",
-            lambda: event_vs_dense.bench(quick=args.quick))
-    if not args.skip_scaling:
-        section("fig3_1_strong_scaling",
-                lambda: scaling.strong_scaling(quick=args.quick))
-        section("fig3_2_weak_scaling",
-                lambda: scaling.weak_scaling(quick=args.quick))
-    section("lm_throughput", lambda: lm_throughput.bench(quick=args.quick))
-    section("roofline_report", lambda: roofline.report())
-
-    print("\n===== summary =====")
-    print(json.dumps({k: ("ok" if k in results else "fail")
-                      for k in results}, indent=1))
-    if failures:
-        print(f"FAILURES: {failures}")
-        sys.exit(1)
-    print("all benchmarks completed")
+    names = registry.default_names(include_slow=not args.skip_scaling)
+    argv = ["run", "--out", args.out] + (["--quick"] if args.quick else []) \
+        + names
+    sys.exit(cli.main(argv))
 
 
 if __name__ == "__main__":

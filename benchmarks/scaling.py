@@ -1,97 +1,14 @@
-"""Paper Figures 3-1 / 3-2: strong and weak scaling of the DPSNN engine.
+"""Thin entry for the scaling suite (paper Figures 3-1 / 3-2); the
+implementation lives in `repro.bench.suites.scaling`.
 
-Each scaling point runs in a fresh interpreter with H forced host devices
-and one shard per device (shard_map + real collectives).  NOTE on honesty:
-this container exposes ONE physical core, so wall-clock cannot decrease
-with H the way the paper's 128-core cluster does; what these curves
-measure here is (a) the engine runs correctly at every H with identical
-spiking, (b) the distribution overhead (collective + imbalance) vs H,
-which is exactly the quantity the paper's Discussion section analyses.
-On real hardware the same harness produces the paper's curves.
+  python -m benchmarks.scaling --quick [--strong-only|--weak-only]
 """
 from __future__ import annotations
 
-import json
+from repro.bench.suites.scaling import (run_suite, strong_scaling,
+                                        weak_scaling)
 
-from ._util import run_subprocess
-
-_POINT = """
-import time, numpy as np, jax
-from repro.core import EngineConfig, GridConfig, build, observables
-from repro.core import distributed as D
-
-H = {H}
-cfg = GridConfig(grid_x={gx}, grid_y={gy}, neurons_per_column={npc})
-eng = EngineConfig(n_shards=H, exchange={exchange!r})
-spec, plan, state = build(cfg, eng)
-mesh = D.make_mesh(H)
-plan = D.shard_put(mesh, plan)
-state = D.shard_put(mesh, state)
-runner = D.make_sharded_run(spec, plan, mesh)
-s2, raster, tm = runner(state, 0, {steps})       # compile
-jax.block_until_ready(raster)
-t0 = time.time()
-s2, raster, tm = runner(state, 0, {steps})
-jax.block_until_ready(raster)
-wall = time.time() - t0
-raster = np.asarray(raster)
-rate = observables.mean_rate_hz(raster, cfg.n_neurons)
-sig = observables.raster_signature(raster, np.asarray(plan.gid))
-print("RESULT", wall, rate, sig.hex()[:16])
-"""
-
-
-def _run_point(H, gx, gy, npc, steps, exchange="allgather"):
-    out = run_subprocess(_POINT.format(H=H, gx=gx, gy=gy, npc=npc,
-                                       steps=steps, exchange=exchange), H)
-    for line in out.splitlines():
-        if line.startswith("RESULT"):
-            _, wall, rate, sig = line.split()
-            return float(wall), float(rate), sig
-    raise RuntimeError(out)
-
-
-def strong_scaling(quick: bool = False):
-    """Fixed problem (4x4 grid, 3.2M synapses), growing H."""
-    gx = gy = 2 if quick else 4
-    npc = 500 if quick else 1000
-    steps = 100 if quick else 200
-    hs = [1, 2, 4] if quick else [1, 2, 4, 8]
-    rows, sig0 = [], None
-    for h in hs:
-        wall, rate, sig = _run_point(h, gx, gy, npc, steps)
-        sig0 = sig0 or sig
-        n_syn = gx * gy * npc * 200
-        norm = wall / (n_syn * steps / 1000.0 * max(rate, 1e-9))
-        row = dict(mode="strong", shards=h, synapses=n_syn, wall_s=round(
-            wall, 3), rate_hz=round(rate, 1),
-            norm_s=float(f"{norm:.3e}"),
-            identical_spikes=(sig == sig0))
-        rows.append(row)
-        print("[scaling]", json.dumps(row), flush=True)
-    assert all(r["identical_spikes"] for r in rows), \
-        "spiking must be identical across distributions (paper Table 1)"
-    return rows
-
-
-def weak_scaling(quick: bool = False):
-    """Fixed synapses per shard (1 column/shard), growing H."""
-    npc = 500 if quick else 1000
-    steps = 100 if quick else 200
-    grids = [(1, 1), (2, 1), (2, 2)] if quick else [(1, 1), (2, 1), (2, 2),
-                                                    (4, 2)]
-    rows = []
-    for gx, gy in grids:
-        h = gx * gy
-        wall, rate, sig = _run_point(h, gx, gy, npc, steps)
-        syn_per_shard = npc * 200
-        norm = wall / (syn_per_shard * steps / 1000.0 * max(rate, 1e-9))
-        row = dict(mode="weak", shards=h, syn_per_shard=syn_per_shard,
-                   wall_s=round(wall, 3), rate_hz=round(rate, 1),
-                   norm_s=float(f"{norm:.3e}"))
-        rows.append(row)
-        print("[scaling]", json.dumps(row), flush=True)
-    return rows
+__all__ = ["run_suite", "strong_scaling", "weak_scaling"]
 
 
 if __name__ == "__main__":

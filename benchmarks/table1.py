@@ -1,69 +1,8 @@
-"""Paper Table 1: problem sizes, firing rates, and the normalized
-time-per-synapse metric.
+"""Thin entry for the paper-Table-1 suite; the implementation lives in
+`repro.bench.suites.table1`."""
+from repro.bench.suites.table1 import PAPER_RATES, ROWS, bench, run_suite
 
-The paper sweeps 200K .. 1.6G synapses; on this CPU container we execute
-the lower rows for real (0.2M .. 12.8M synapses) and verify (a) the firing
-rate lands in the paper's 20-48 Hz initial-activity band, (b) the detailed
-firing is identical across process distributions (the paper's Table-1
-check), (c) the normalized execution time (s per synapse per simulated
-second, divided by rate — the paper's metric) is size-independent.  The
-full 128x64 grid is exercised by the dry-run instead (launch/dryrun --snn).
-"""
-from __future__ import annotations
-
-import json
-import time
-
-import jax
-import numpy as np
-
-from repro.core import (EngineConfig, GridConfig, build, observables, run)
-
-# (grid_x, grid_y) -> paper row; synapses = cols * 1000 * 200
-ROWS = [
-    (1, 1),      # 200 K synapses   (paper: 20 Hz)
-    (4, 4),      # 3.2 M            (paper: 26 Hz)
-    (8, 4),      # 6.4 M            (paper: 29 Hz)
-    (8, 8),      # 12.8 M           (paper: 31 Hz)
-]
-PAPER_RATES = {1: 20, 16: 26, 32: 29, 64: 31, 128: 33, 256: 33}
-
-
-def bench(steps: int = 300, rows=None, quick: bool = False):
-    rows = rows if rows is not None else (ROWS[:2] if quick else ROWS)
-    steps = 150 if quick else steps
-    out = []
-    for gx, gy in rows:
-        cfg = GridConfig(grid_x=gx, grid_y=gy)
-        t0 = time.time()
-        spec, plan, state = build(cfg, EngineConfig(n_shards=1))
-        build_s = time.time() - t0
-
-        run_j = jax.jit(lambda s: run(spec, plan, s, 0, steps))
-        state2, raster, tm = run_j(state)          # compile+run
-        jax.block_until_ready(raster)
-        t0 = time.time()
-        state2, raster, tm = run_j(state)
-        jax.block_until_ready(raster)
-        wall = time.time() - t0
-
-        raster = np.asarray(raster)
-        rate = observables.mean_rate_hz(raster, cfg.n_neurons)
-        sim_seconds = steps / 1000.0
-        # paper metric: wall / (synapses * sim_seconds * rate)
-        norm = wall / (cfg.n_synapses * sim_seconds * max(rate, 1e-9))
-        row = dict(grid=f"{gx}x{gy}", columns=cfg.n_columns,
-                   neurons=cfg.n_neurons, synapses=cfg.n_synapses,
-                   steps=steps, rate_hz=round(float(rate), 1),
-                   paper_rate_hz=PAPER_RATES.get(cfg.n_columns),
-                   wall_s=round(wall, 3), build_s=round(build_s, 2),
-                   norm_s_per_syn_per_s_per_hz=float(f"{norm:.3e}"),
-                   syn_events_per_s=int(cfg.n_synapses * rate * sim_seconds
-                                        / wall))
-        out.append(row)
-        print("[table1]", json.dumps(row), flush=True)
-    return out
-
+__all__ = ["PAPER_RATES", "ROWS", "bench", "run_suite"]
 
 if __name__ == "__main__":
     bench()

@@ -1,93 +1,9 @@
-"""Paper Table 2: per-phase time decomposition.
+"""Thin entry for the paper-Table-2 per-phase split; the implementation
+lives in `repro.bench.suites.table2` (a projection of the general
+`repro.bench.profile` matrix onto H=1)."""
+from repro.bench.suites.table2 import bench, run_suite
 
-The paper instruments (1) barrier wait, (2) spike-counter exchange,
-(3) payload transmission, (4) total, and concludes communication is <=10%
-of the total — load imbalance, not comms, causes the scaling gap.
-
-Here each phase is a separately-jitted function timed with
-block_until_ready: 'compute' = phase A (neural dynamics + STDP),
-'pack' = AER encode (the counter lane), 'exchange+inject' = delivery +
-phase B.  Under SPMD the paper's explicit barrier is the collective
-itself, so 'exchange' also absorbs the imbalance wait — we report the
-residual (exchange_t - min over shards of exchange_t) as the barrier
-proxy when H > 1.
-"""
-from __future__ import annotations
-
-import json
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import EngineConfig, GridConfig, build
-from repro.core import engine as E
-from repro.core import aer, stimulus
-
-
-def bench(gx=2, gy=2, npc=1000, steps=200, quick=False):
-    if quick:
-        gx = gy = 2
-        npc = 250
-        steps = 100
-    cfg = GridConfig(grid_x=gx, grid_y=gy, neurons_per_column=npc)
-    spec, plan, state = build(cfg, EngineConfig(n_shards=1))
-    stim_k = stimulus.stim_key(cfg)
-
-    p1 = jax.tree.map(lambda x: x[0], plan)
-
-    @jax.jit
-    def phase_a(state1, t):
-        return E.phase_a(spec, p1, state1, t, stim_k)
-
-    @jax.jit
-    def pack(spiked, gid):
-        return aer.pack(spiked, gid, gid.shape[0])
-
-    @jax.jit
-    def exchange_inject(state1, ids, t):
-        spiked_src = aer.match_sources(ids, p1.src_gid)
-        return E.phase_b(spec, p1, state1, spiked_src, t)
-
-    s1 = jax.tree.map(lambda x: x[0], state)
-    times = dict(compute=0.0, pack=0.0, exchange_inject=0.0)
-    n_spikes = 0
-    # warmup
-    st, spiked, _ = phase_a(s1, jnp.int32(0))
-    ids, cnt = pack(spiked, p1.gid)
-    _ = exchange_inject(st, ids, jnp.int32(0))
-
-    s = s1
-    for t in range(steps):
-        tt = jnp.int32(t)
-        t0 = time.time()
-        s, spiked, tm = phase_a(s, tt)
-        jax.block_until_ready(spiked)
-        times["compute"] += time.time() - t0
-
-        t0 = time.time()
-        ids, cnt = pack(spiked, p1.gid)
-        jax.block_until_ready(ids)
-        times["pack"] += time.time() - t0
-
-        t0 = time.time()
-        s = exchange_inject(s, ids, tt)
-        jax.block_until_ready(s.arr_ring)
-        times["exchange_inject"] += time.time() - t0
-        n_spikes += int(cnt)
-
-    total = sum(times.values())
-    comm_frac = (times["pack"] + times["exchange_inject"]) / total
-    row = dict(grid=f"{gx}x{gy}", steps=steps, spikes=n_spikes,
-               compute_s=round(times["compute"], 3),
-               pack_s=round(times["pack"], 3),
-               exchange_inject_s=round(times["exchange_inject"], 3),
-               total_s=round(total, 3),
-               comm_fraction=round(comm_frac, 3),
-               paper_claim="comm <= ~10% of total")
-    print("[table2]", json.dumps(row), flush=True)
-    return row
-
+__all__ = ["bench", "run_suite"]
 
 if __name__ == "__main__":
     bench()

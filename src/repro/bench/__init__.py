@@ -1,0 +1,27 @@
+"""repro.bench — the benchmarking subsystem.
+
+The paper is a benchmark mini-application: its headline results are
+scaling curves plus a per-phase computation/communication profile.  This
+package makes those measurements first-class and machine-readable:
+
+  timing   — honest wall-clock harness (warmup, block_until_ready,
+             median-of-k, the paper's normalized time/synapse metric)
+  profile  — per-phase (compute / exchange / arborization) instrumentation
+             across exchange modes and placements, with deterministic
+             counters and trip-count-aware HLO costs
+  report   — versioned BENCH_<name>.json schema + baseline comparator
+             (hard-fails deterministic drift, warns on wall-clock)
+  registry — suite registration; cli — `python -m repro.bench
+             run|compare|list`
+  subproc  — fresh-interpreter scaling points (forced host device counts)
+
+`benchmarks/*.py` at the repo root are thin entry scripts over this
+package; committed baselines live in `benchmarks/baselines/`.
+"""
+from . import registry, report, timing
+from .report import CompareResult, compare, compare_dirs, make_report, validate
+
+__all__ = [
+    "registry", "report", "timing",
+    "CompareResult", "compare", "compare_dirs", "make_report", "validate",
+]

@@ -1,0 +1,101 @@
+"""`python -m repro.bench` — run benchmarks, write BENCH_<name>.json,
+gate against committed baselines.
+
+  python -m repro.bench list
+  python -m repro.bench run [names...] [--quick] [--all] [--out DIR]
+  python -m repro.bench compare [names...] [--current DIR]
+                                [--baseline DIR] [--wall-tol F]
+
+`run` with no names executes every non-slow suite; `compare` exits
+nonzero on any deterministic drift (see repro.bench.report for the
+policy), which is what the CI bench job gates on.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import registry, report
+
+DEFAULT_OUT = "results/bench"
+DEFAULT_BASELINES = "benchmarks/baselines"
+
+
+def _cmd_list(args) -> int:
+    for name in sorted(registry.BENCHES):
+        e = registry.BENCHES[name]
+        tag = " [slow]" if e.slow else ""
+        print(f"{name:16s}{tag:7s} {e.doc}")
+    return 0
+
+
+def _cmd_run(args) -> int:
+    names = args.names or registry.default_names(include_slow=args.all)
+    failures = []
+    for name in names:
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            rep = registry.get(name).fn(args.quick)
+            path = report.save(rep, args.out)
+            print(f"[bench] wrote {path} "
+                  f"({len(rep['deterministic'])} deterministic, "
+                  f"{len(rep['wall'])} wall metrics)", flush=True)
+        except Exception as e:
+            failures.append(name)
+            print(f"[bench] {name} FAILED: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILURES: {failures}")
+        return 1
+    print(f"\nall {len(names)} benchmark suite(s) completed")
+    return 0
+
+
+def _cmd_compare(args) -> int:
+    res = report.compare_dirs(args.current, args.baseline,
+                              names=args.names or None,
+                              wall_tol=args.wall_tol)
+    print(res.render())
+    return 0 if res.ok else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.bench",
+                                 description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sub.add_parser("list", help="list registered benchmark suites")
+
+    rp = sub.add_parser("run", help="run suites, write BENCH_*.json")
+    rp.add_argument("names", nargs="*",
+                    help="suite names (default: all non-slow)")
+    rp.add_argument("--quick", action="store_true",
+                    help="CI-sized grids/steps")
+    rp.add_argument("--all", action="store_true",
+                    help="include slow (subprocess) suites in the default "
+                         "set")
+    rp.add_argument("--out", default=DEFAULT_OUT,
+                    help=f"output directory (default {DEFAULT_OUT})")
+
+    cp = sub.add_parser("compare",
+                        help="gate current reports against baselines")
+    cp.add_argument("names", nargs="*",
+                    help="suite names (default: every baseline present)")
+    cp.add_argument("--current", default=DEFAULT_OUT,
+                    help=f"directory with fresh reports "
+                         f"(default {DEFAULT_OUT})")
+    cp.add_argument("--baseline", default=DEFAULT_BASELINES,
+                    help=f"committed baseline directory "
+                         f"(default {DEFAULT_BASELINES})")
+    cp.add_argument("--wall-tol", type=float, default=0.5,
+                    help="relative wall-clock warn threshold "
+                         "(default 0.5 = ±50%%)")
+
+    args = ap.parse_args(argv)
+    return {"list": _cmd_list, "run": _cmd_run,
+            "compare": _cmd_compare}[args.cmd](args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,207 @@
+"""Per-phase profiling of the DPSNN step (paper Table 2 instrumentation).
+
+The paper splits wall-clock into computational and communication parts and
+concludes communication stays <= ~10% of the total.  Here the step is cut
+at the same joints, each phase a separately-jitted function timed with
+`block_until_ready`:
+
+  phase_a     — local dynamics: arrivals -> currents -> LTD -> Izhikevich
+                update -> LTP (the paper's "dynamic phase" compute),
+  exchange    — spike delivery between shards, in both engine modes:
+                'allgather' builds the global spike mask, 'halo' packs
+                fixed-capacity AER buffers and routes them along the static
+                halo offsets (the paper's two-phase sparse delivery),
+  phase_b     — deferred axonal arborization (arrival-ring updates).
+
+Shards are logical (`vmap` over the stacked [H, ...] plan) so the profile
+runs on a single device: the halo route is emulated with `jnp.roll` over
+the shard axis, which preserves the exchange's full compute graph (AER
+pack/sort, scatter-match) while the wire itself is measured by the
+multi-process scaling suite.  Alongside wall-clock, each cell records the
+deterministic counters (total spikes/arrivals, raster signature) and the
+trip-count-aware HLO flops/bytes of the fused step
+(`launch/hlo_cost.py`) — the metrics the baseline comparator gates hard.
+"""
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import aer, engine, observables, stimulus
+from ..core import distributed as dcore
+from ..core.params import EngineConfig, GridConfig
+
+EXCHANGES = ("allgather", "halo")
+PLACEMENTS = ("block", "scatter")
+
+
+def make_phase_fns(spec, plan) -> Tuple:
+    """(phase_a, exchange, phase_b, fused_step) jitted over stacked shards.
+
+    `exchange` matches `spec.eng.exchange`.  The plan is an explicit
+    argument of every jitted function, NOT a closure: closed-over arrays
+    lower to XLA literal constants, which the CPU backend re-materializes
+    on every execution — measured ~50x slower per phase call at 200k
+    synapses.  `plan` here is only used to derive the static halo offsets.
+    """
+    stim_k = stimulus.stim_key(spec.cfg)
+
+    def _phase_a(plan, state, t):
+        return jax.vmap(
+            lambda p, s: engine.phase_a(spec, p, s, t, stim_k))(plan, state)
+
+    def _ex_allgather(plan, spiked):
+        glob = engine._global_spike_mask(spec, plan, spiked)
+        return jax.vmap(
+            lambda p: glob.at[p.src_gid].get(mode="fill", fill_value=False)
+            & (p.src_gid >= 0))(plan)
+
+    offsets = dcore.halo_offsets(spec, plan) \
+        if spec.eng.exchange == "halo" else None
+
+    def _ex_halo(plan, spiked):
+        ids_all, _ = jax.vmap(
+            lambda p, s: aer.pack(s, p.gid, p.gid.shape[0]))(plan, spiked)
+        # receiver h hears sender (h - d) % H: the single-device analogue of
+        # the ppermute in core.distributed._spiked_src_halo
+        received = [jnp.roll(ids_all, d, axis=0) for d in offsets]
+        all_ids = jnp.concatenate(received, axis=1)
+
+        def match(p, ids_row):
+            mask = jnp.zeros((spec.n_total,), bool).at[ids_row].set(
+                True, mode="drop")
+            return mask.at[p.src_gid].get(mode="fill", fill_value=False) \
+                & (p.src_gid >= 0)
+
+        return jax.vmap(match)(plan, all_ids)
+
+    _exchange = _ex_halo if spec.eng.exchange == "halo" else _ex_allgather
+
+    def _phase_b(plan, state, spiked_src, t):
+        return jax.vmap(
+            lambda p, s, x: engine.phase_b(spec, p, s, x, t))(plan, state,
+                                                              spiked_src)
+
+    def _fused(plan, state, t):
+        state, spiked, tm = _phase_a(plan, state, t)
+        spiked_src = _exchange(plan, spiked)
+        state = _phase_b(plan, state, spiked_src, t)
+        return state, spiked, tm
+
+    return (jax.jit(_phase_a), jax.jit(_exchange), jax.jit(_phase_b),
+            jax.jit(_fused))
+
+
+def _hlo_step_cost(fused, plan, state) -> Tuple[int, int]:
+    """(flops, bytes) of one fused step from the optimized HLO."""
+    from ..launch import hlo_cost
+    compiled = fused.lower(plan, state, jnp.int32(0)).compile()
+    parsed = hlo_cost.analyze(compiled.as_text())
+    return int(round(parsed["flops"])), int(round(parsed["bytes"]))
+
+
+def profile_cell(cfg: GridConfig, eng: EngineConfig, steps: int) -> dict:
+    """Profile one (exchange, placement) cell; returns flat metrics."""
+    spec, plan, state = engine.build(cfg, eng)
+    phase_a, exchange, phase_b, fused = make_phase_fns(spec, plan)
+
+    # warmup: compile all three phase functions (t is traced, so one call
+    # covers every step)
+    t0j = jnp.int32(0)
+    st_w, spiked_w, _ = phase_a(plan, state, t0j)
+    ss_w = exchange(plan, spiked_w)
+    jax.block_until_ready(phase_b(plan, st_w, ss_w, t0j))
+
+    times = dict(phase_a_s=0.0, exchange_s=0.0, phase_b_s=0.0)
+    spikes = arrivals = 0
+    rasters = []
+    s = state
+    wall0 = time.perf_counter()
+    for t in range(steps):
+        tt = jnp.int32(t)
+        t0 = time.perf_counter()
+        s2, spiked, tm = phase_a(plan, s, tt)
+        jax.block_until_ready(spiked)
+        times["phase_a_s"] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        spiked_src = exchange(plan, spiked)
+        jax.block_until_ready(spiked_src)
+        times["exchange_s"] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        s = phase_b(plan, s2, spiked_src, tt)
+        jax.block_until_ready(s.arr_ring)
+        times["phase_b_s"] += time.perf_counter() - t0
+
+        spikes += int(np.asarray(tm.spikes).sum())
+        arrivals += int(np.asarray(tm.arrivals).sum())
+        rasters.append(np.asarray(spiked))
+    wall_s = time.perf_counter() - wall0
+
+    raster = np.stack(rasters)                       # [T, H, N]
+    sig = observables.raster_signature(raster, np.asarray(plan.gid))
+    rate = observables.mean_rate_hz(raster, cfg.n_neurons)
+    hlo_flops, hlo_bytes = _hlo_step_cost(fused, plan, state)
+
+    phases_sum = sum(times.values())
+    return dict(
+        exchange=eng.exchange, placement=eng.placement, steps=steps,
+        **{k: round(v, 4) for k, v in times.items()},
+        phases_sum_s=round(phases_sum, 4), wall_s=round(wall_s, 4),
+        steps_per_s=round(steps / wall_s, 2) if wall_s else 0.0,
+        comm_fraction=round(times["exchange_s"] / phases_sum, 4)
+        if phases_sum else 0.0,
+        spikes=spikes, arrivals=arrivals, raster_sig=sig.hex(),
+        rate_hz=round(rate, 2), hlo_flops=hlo_flops, hlo_bytes=hlo_bytes)
+
+
+def run_profile(quick: bool = False) -> dict:
+    """Full exchange x placement profiling matrix -> one bench report.
+
+    Enforces the paper's Table 1 invariant in-process: every cell must
+    produce the identical raster signature and spike/arrival totals — the
+    distribution layout may change the timings, never the physics.
+    """
+    from . import report as R
+
+    gx = gy = 2
+    npc = 200 if quick else 1000
+    H = 2 if quick else 4
+    steps = 60 if quick else 150
+    cfg = GridConfig(grid_x=gx, grid_y=gy, neurons_per_column=npc)
+
+    cells = {}
+    for ex in EXCHANGES:
+        for pl in PLACEMENTS:
+            eng = EngineConfig(n_shards=H, exchange=ex, placement=pl)
+            cells[f"{ex}_{pl}"] = profile_cell(cfg, eng, steps)
+
+    sigs = {k: c["raster_sig"] for k, c in cells.items()}
+    if len(set(sigs.values())) != 1:
+        raise RuntimeError(f"paper Table 1 invariant violated: raster "
+                           f"signatures differ across layouts: {sigs}")
+    counts = {k: (c["spikes"], c["arrivals"]) for k, c in cells.items()}
+    if len(set(counts.values())) != 1:
+        raise RuntimeError(f"spike/arrival totals differ across layouts: "
+                           f"{counts}")
+
+    ref = next(iter(cells.values()))
+    deterministic = dict(spikes=ref["spikes"], arrivals=ref["arrivals"],
+                         raster_sig=ref["raster_sig"])
+    wall = {}
+    for key, c in cells.items():
+        deterministic[f"hlo_flops_{key}"] = c["hlo_flops"]
+        deterministic[f"hlo_bytes_{key}"] = c["hlo_bytes"]
+        for m in ("phase_a_s", "exchange_s", "phase_b_s", "wall_s",
+                  "steps_per_s"):
+            wall[f"{key}_{m}"] = c[m]
+    config = dict(grid=f"{gx}x{gy}", neurons_per_column=npc, shards=H,
+                  steps=steps, quick=quick)
+    extra = dict(rate_hz=ref["rate_hz"],
+                 cells=[dict(cell=k, **c) for k, c in cells.items()])
+    return R.make_report("profile", config, deterministic, wall, extra)

@@ -1,0 +1,85 @@
+"""Benchmark registry: name -> suite runner.
+
+Every entry is a thin loader so `repro.bench list` never pays suite import
+cost (the LM suites pull the full model stack).  `slow` entries (fresh-
+interpreter scaling points) are excluded from the default `run` set and
+must be named explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List
+
+
+@dataclasses.dataclass(frozen=True)
+class Entry:
+    name: str
+    fn: Callable[[bool], dict]        # quick -> report dict
+    doc: str
+    slow: bool = False
+
+
+def _profile(quick):
+    from . import profile
+    return profile.run_profile(quick)
+
+
+def _table1(quick):
+    from .suites import table1
+    return table1.run_suite(quick)
+
+
+def _table2(quick):
+    from .suites import table2
+    return table2.run_suite(quick)
+
+
+def _event_vs_dense(quick):
+    from .suites import event_vs_dense
+    return event_vs_dense.run_suite(quick)
+
+
+def _lm_throughput(quick):
+    from .suites import lm_throughput
+    return lm_throughput.run_suite(quick)
+
+
+def _roofline(quick):
+    from .suites import roofline
+    return roofline.run_suite(quick)
+
+
+def _scaling(quick):
+    from .suites import scaling
+    return scaling.run_suite(quick)
+
+
+BENCHES: Dict[str, Entry] = {e.name: e for e in [
+    Entry("profile", _profile,
+          "per-phase compute/exchange/arborization split, "
+          "{allgather,halo} x {block,scatter} (paper Table 2)"),
+    Entry("table1", _table1,
+          "problem sizes, rates, normalized time/synapse (paper Table 1)"),
+    Entry("table2", _table2,
+          "H=1 compute/communication split (paper Table 2, legacy view)"),
+    Entry("event_vs_dense", _event_vs_dense,
+          "dense O(E) vs event-driven delivery crossover (beyond-paper)"),
+    Entry("lm_throughput", _lm_throughput,
+          "LM substrate train/decode tokens/s (CPU micro-benchmark)"),
+    Entry("roofline", _roofline,
+          "three-term roofline table from results/dryrun (analytic)"),
+    Entry("scaling", _scaling,
+          "strong/weak scaling, fresh interpreter per H "
+          "(paper Figs 3-1/3-2)", slow=True),
+]}
+
+
+def get(name: str) -> Entry:
+    if name not in BENCHES:
+        raise KeyError(f"unknown benchmark {name!r}; known: "
+                       f"{sorted(BENCHES)}")
+    return BENCHES[name]
+
+
+def default_names(include_slow: bool = False) -> List[str]:
+    return [n for n, e in BENCHES.items() if include_slow or not e.slow]

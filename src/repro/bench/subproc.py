@@ -1,0 +1,51 @@
+"""Fresh-interpreter benchmark subprocesses.
+
+jax locks the host device count at first init, so every scaling point runs
+in a fresh process with its own forced count — which is also what makes
+the measurement honest: each point pays full startup, like an MPI job.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import repro
+from repro._flags import subprocess_env
+
+# src/ directory containing the `repro` package — valid for both the
+# editable install and a plain checkout; exported on the child PYTHONPATH
+# so subprocess code imports `repro` even when the parent runs uninstalled.
+SRC = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+
+
+def _tail(stream, limit: int = 2000) -> str:
+    if stream is None:
+        return "<no output captured>"
+    if isinstance(stream, bytes):
+        stream = stream.decode("utf-8", errors="replace")
+    return stream[-limit:]
+
+
+def run_subprocess(code: str, n_devices: int = 1, timeout: int = 1800,
+                   extra_env=None) -> str:
+    """Run `code` in a fresh interpreter with `n_devices` forced host
+    devices; returns its stdout.  On timeout the child is killed and the
+    captured stdout/stderr tails are surfaced in the raised error (a bare
+    `TimeoutExpired` would lose them)."""
+    env = subprocess_env(n_devices, SRC)
+    env.update(extra_env or {})
+    try:
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, env=env,
+                             timeout=timeout)
+    except subprocess.TimeoutExpired as e:
+        raise RuntimeError(
+            f"bench subprocess timed out after {timeout}s\n"
+            f"stdout tail:\n{_tail(e.stdout)}\n"
+            f"stderr tail:\n{_tail(e.stderr)}") from e
+    if out.returncode != 0:
+        raise RuntimeError(f"bench subprocess failed "
+                           f"(rc={out.returncode}):\n{out.stdout}\n"
+                           f"{out.stderr}")
+    return out.stdout

@@ -1,0 +1,6 @@
+"""Benchmark suites (one per paper table/figure + beyond-paper ablations).
+
+Each module exposes `run(quick: bool) -> report dict` (consumed by
+`repro.bench.registry`) plus the legacy `bench(...)`-style callables that
+the thin `benchmarks/*.py` entry scripts keep re-exporting.
+"""

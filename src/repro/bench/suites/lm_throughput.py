@@ -1,0 +1,71 @@
+"""LM-side micro-benchmarks: train tokens/s and decode tokens/s on CPU for
+a reduced config (the framework half of the system; TPU projections come
+from the roofline, not from CPU wall-time).  Wall-clock only — the final
+loss is floating-point and version-sensitive, so it is reported but not
+gated."""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data import pipeline
+from repro.models import lm
+from repro.optim import schedules
+from repro.train import step as step_mod
+from repro.train.train_state import create
+from .. import report as R
+from .. import timing
+
+
+def bench(arch: str = "qwen3-0.6b", steps: int = 10, batch: int = 8,
+          seq: int = 128, quick: bool = False):
+    if quick:
+        steps, batch, seq = 5, 4, 64
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(cfg, jax.random.key(0))
+    state = create(params)
+    step = jax.jit(step_mod.make_train_step(
+        cfg, lr_schedule=schedules.cosine(3e-4, 10, 1000)))
+    data = iter(pipeline.Batcher(cfg, batch, seq, seed=1))
+
+    b = next(data)
+    state, m = step(state, b)                   # compile
+    jax.block_until_ready(m["loss"])
+    with timing.Timer() as tw:
+        for _ in range(steps):
+            state, m = step(state, next(data))
+        jax.block_until_ready(m["loss"])
+    row = dict(kind="train", arch=arch, steps=steps,
+               tokens_per_s=int(steps * batch * seq / tw.s),
+               wall_s=round(tw.s, 2), final_loss=round(float(m["loss"]), 3))
+    print("[lm]", json.dumps(row), flush=True)
+
+    # decode throughput
+    cache = lm.init_cache(cfg, batch, 64)
+    dstep = jax.jit(lambda c, t: lm.decode_step(cfg, params, c, t))
+    tok = jnp.ones((batch, 1), jnp.int32)
+    _, cache = dstep(cache, tok)               # compile
+    n = 20 if quick else 50
+    with timing.Timer() as td:
+        for _ in range(n):
+            lg, cache = dstep(cache, tok)
+            tok = lg.argmax(-1).astype(jnp.int32)
+        jax.block_until_ready(tok)
+    row2 = dict(kind="decode", arch=arch,
+                tokens_per_s=int(n * batch / td.s), wall_s=round(td.s, 2))
+    print("[lm]", json.dumps(row2), flush=True)
+    return [row, row2]
+
+
+def run_suite(quick: bool = False) -> dict:
+    rows = bench(quick=quick)
+    wall = dict(train_tokens_per_s=rows[0]["tokens_per_s"],
+                train_wall_s=rows[0]["wall_s"],
+                decode_tokens_per_s=rows[1]["tokens_per_s"],
+                decode_wall_s=rows[1]["wall_s"])
+    config = dict(quick=quick, arch=rows[0]["arch"])
+    return R.make_report("lm_throughput", config, {}, wall,
+                         extra=dict(rows=rows))

@@ -1,0 +1,116 @@
+"""Paper Figures 3-1 / 3-2: strong and weak scaling of the DPSNN engine.
+
+Each scaling point runs in a fresh interpreter with H forced host devices
+and one shard per device (shard_map + real collectives).  NOTE on honesty:
+a single-core container cannot show wall-clock decreasing with H the way
+the paper's 128-core cluster does; what these curves measure there is
+(a) the engine runs correctly at every H with identical spiking, (b) the
+distribution overhead (collective + imbalance) vs H, which is exactly the
+quantity the paper's Discussion section analyses.  On real hardware the
+same harness produces the paper's curves.
+"""
+from __future__ import annotations
+
+import json
+
+from .. import report as R
+from ..subproc import run_subprocess
+
+_POINT = """
+import time, numpy as np, jax
+from repro.core import EngineConfig, GridConfig, build, observables
+from repro.core import distributed as D
+
+H = {H}
+cfg = GridConfig(grid_x={gx}, grid_y={gy}, neurons_per_column={npc})
+eng = EngineConfig(n_shards=H, exchange={exchange!r})
+spec, plan, state = build(cfg, eng)
+mesh = D.make_mesh(H)
+plan = D.shard_put(mesh, plan)
+state = D.shard_put(mesh, state)
+runner = D.make_sharded_run(spec, plan, mesh)
+s2, raster, tm = runner(state, 0, {steps})       # compile
+jax.block_until_ready(raster)
+t0 = time.time()
+s2, raster, tm = runner(state, 0, {steps})
+jax.block_until_ready(raster)
+wall = time.time() - t0
+raster = np.asarray(raster)
+rate = observables.mean_rate_hz(raster, cfg.n_neurons)
+sig = observables.raster_signature(raster, np.asarray(plan.gid))
+print("RESULT", wall, rate, sig.hex()[:16])
+"""
+
+
+def _run_point(H, gx, gy, npc, steps, exchange="allgather"):
+    out = run_subprocess(_POINT.format(H=H, gx=gx, gy=gy, npc=npc,
+                                       steps=steps, exchange=exchange), H)
+    for line in out.splitlines():
+        if line.startswith("RESULT"):
+            _, wall, rate, sig = line.split()
+            return float(wall), float(rate), sig
+    raise RuntimeError(out)
+
+
+def strong_scaling(quick: bool = False):
+    """Fixed problem (4x4 grid, 3.2M synapses), growing H."""
+    gx = gy = 2 if quick else 4
+    npc = 500 if quick else 1000
+    steps = 100 if quick else 200
+    hs = [1, 2, 4] if quick else [1, 2, 4, 8]
+    rows, sig0 = [], None
+    for h in hs:
+        wall, rate, sig = _run_point(h, gx, gy, npc, steps)
+        sig0 = sig0 or sig
+        n_syn = gx * gy * npc * 200
+        norm = wall / (n_syn * steps / 1000.0 * max(rate, 1e-9))
+        row = dict(mode="strong", shards=h, synapses=n_syn, wall_s=round(
+            wall, 3), rate_hz=round(rate, 1),
+            raster_sig=sig,
+            norm_s=float(f"{norm:.3e}"),
+            identical_spikes=(sig == sig0))
+        rows.append(row)
+        print("[scaling]", json.dumps(row), flush=True)
+    assert all(r["identical_spikes"] for r in rows), \
+        "spiking must be identical across distributions (paper Table 1)"
+    return rows
+
+
+def weak_scaling(quick: bool = False):
+    """Fixed synapses per shard (1 column/shard), growing H."""
+    npc = 500 if quick else 1000
+    steps = 100 if quick else 200
+    grids = [(1, 1), (2, 1), (2, 2)] if quick else [(1, 1), (2, 1), (2, 2),
+                                                    (4, 2)]
+    rows = []
+    for gx, gy in grids:
+        h = gx * gy
+        wall, rate, sig = _run_point(h, gx, gy, npc, steps)
+        syn_per_shard = npc * 200
+        norm = wall / (syn_per_shard * steps / 1000.0 * max(rate, 1e-9))
+        row = dict(mode="weak", shards=h, syn_per_shard=syn_per_shard,
+                   wall_s=round(wall, 3), rate_hz=round(rate, 1),
+                   raster_sig=sig,
+                   norm_s=float(f"{norm:.3e}"))
+        rows.append(row)
+        print("[scaling]", json.dumps(row), flush=True)
+    return rows
+
+
+def run_suite(quick: bool = False) -> dict:
+    strong = strong_scaling(quick=quick)
+    weak = weak_scaling(quick=quick)
+    deterministic = dict(
+        strong_raster_sig=strong[0]["raster_sig"],
+        strong_identical_across_h=all(r["identical_spikes"]
+                                      for r in strong))
+    wall = {}
+    for r in strong:
+        wall[f"strong_h{r['shards']}_wall_s"] = r["wall_s"]
+    for r in weak:
+        wall[f"weak_h{r['shards']}_wall_s"] = r["wall_s"]
+    config = dict(quick=quick,
+                  strong_shards=[r["shards"] for r in strong],
+                  weak_shards=[r["shards"] for r in weak])
+    return R.make_report("scaling", config, deterministic, wall,
+                         extra=dict(strong=strong, weak=weak))

@@ -1,0 +1,78 @@
+"""Paper Table 1: problem sizes, firing rates, and the normalized
+time-per-synapse metric.
+
+The paper sweeps 200K .. 1.6G synapses; on a CPU container we execute the
+lower rows for real (0.2M .. 12.8M synapses) and verify (a) the firing
+rate lands in the paper's 20-48 Hz initial-activity band, (b) the detailed
+firing is reproducible (spike counts + raster signature are gated against
+the committed baseline), (c) the normalized execution time (s per synapse
+per simulated second per Hz — the paper's metric) is size-independent.
+The full 128x64 grid is exercised by the dry-run (launch/dryrun --snn).
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from repro.core import EngineConfig, GridConfig, build, observables, run
+from .. import report as R
+from .. import timing
+
+# (grid_x, grid_y) -> paper row; synapses = cols * 1000 * 200
+ROWS = [
+    (1, 1),      # 200 K synapses   (paper: 20 Hz)
+    (4, 4),      # 3.2 M            (paper: 26 Hz)
+    (8, 4),      # 6.4 M            (paper: 29 Hz)
+    (8, 8),      # 12.8 M           (paper: 31 Hz)
+]
+PAPER_RATES = {1: 20, 16: 26, 32: 29, 64: 31, 128: 33, 256: 33}
+
+
+def bench(steps: int = 300, rows=None, quick: bool = False):
+    rows = rows if rows is not None else (ROWS[:2] if quick else ROWS)
+    steps = 150 if quick else steps
+    out = []
+    for gx, gy in rows:
+        cfg = GridConfig(grid_x=gx, grid_y=gy)
+        with timing.Timer() as tb:
+            spec, plan, state = build(cfg, EngineConfig(n_shards=1))
+
+        run_j = jax.jit(lambda s: run(spec, plan, s, 0, steps))
+        _, raster, _ = run_j(state)                  # compile + warm run
+        jax.block_until_ready(raster)
+        t = timing.time_fn(run_j, state, reps=1 if quick else 2, warmup=0)
+
+        raster = np.asarray(raster)
+        rate = observables.mean_rate_hz(raster, cfg.n_neurons)
+        sig = observables.raster_signature(raster, np.asarray(plan.gid))
+        norm = timing.norm_seconds(t.median_s, cfg.n_synapses, steps, rate)
+        row = dict(grid=f"{gx}x{gy}", columns=cfg.n_columns,
+                   neurons=cfg.n_neurons, synapses=cfg.n_synapses,
+                   steps=steps, rate_hz=round(float(rate), 1),
+                   paper_rate_hz=PAPER_RATES.get(cfg.n_columns),
+                   wall_s=round(t.median_s, 3), spread=round(t.spread, 3),
+                   build_s=round(tb.s, 2),
+                   spikes=int(raster.sum()), raster_sig=sig.hex(),
+                   norm_s_per_syn_per_s_per_hz=float(f"{norm:.3e}"),
+                   syn_events_per_s=int(cfg.n_synapses * rate * steps
+                                        / 1000.0 / t.median_s))
+        out.append(row)
+        print("[table1]", json.dumps(row), flush=True)
+    return out
+
+
+def run_suite(quick: bool = False) -> dict:
+    rows = bench(quick=quick)
+    deterministic, wall = {}, {}
+    for r in rows:
+        g = r["grid"]
+        deterministic[f"spikes_{g}"] = r["spikes"]
+        deterministic[f"sig_{g}"] = r["raster_sig"]
+        wall[f"wall_{g}"] = r["wall_s"]
+        wall[f"norm_{g}"] = r["norm_s_per_syn_per_s_per_hz"]
+    config = dict(quick=quick, grids=[r["grid"] for r in rows],
+                  steps=rows[0]["steps"])
+    return R.make_report("table1", config, deterministic, wall,
+                         extra=dict(rows=rows))

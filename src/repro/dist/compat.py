@@ -1,15 +1,18 @@
-"""shard_map across jax versions.
+"""shard_map / make_mesh across jax versions.
 
 jax moved `shard_map` from `jax.experimental.shard_map` (keyword
-`check_rep`) to top-level `jax.shard_map` (keyword `check_vma`).  Every
-caller in this repo goes through `dist.shard_map(f, mesh, in_specs,
-out_specs, check=...)` so the version split lives in exactly one place.
+`check_rep`) to top-level `jax.shard_map` (keyword `check_vma`), and grew
+`jax.make_mesh` only in the later 0.4.x releases.  Every caller in this
+repo goes through `dist.shard_map(...)` / `dist.compat.make_mesh(...)` so
+the version splits live in exactly one place (exercised by the CI jax
+version matrix).
 """
 from __future__ import annotations
 
 import inspect
 
 import jax
+from jax.sharding import Mesh
 
 if hasattr(jax, "shard_map"):
     _shard_map = jax.shard_map
@@ -25,3 +28,11 @@ def shard_map(f, mesh, in_specs, out_specs, *, check: bool = False):
     """Version-stable `shard_map`; `check` maps onto check_vma/check_rep."""
     return _shard_map(f, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, **{_CHECK_KW: check})
+
+
+def make_mesh(axis_shapes, axis_names) -> Mesh:
+    """Version-stable `jax.make_mesh` (absent before jax 0.4.35)."""
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(axis_shapes, axis_names)
+    from jax.experimental import mesh_utils
+    return Mesh(mesh_utils.create_device_mesh(axis_shapes), axis_names)

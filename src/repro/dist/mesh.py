@@ -5,17 +5,18 @@ jax device state (the dry-run driver must set XLA_FLAGS before any jax
 initialization)."""
 from __future__ import annotations
 
-import jax
 from jax.sharding import Mesh
+
+from .compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_snn_mesh(n_shards: int) -> Mesh:
     """The SNN engine is space-parallel only: one flat 'cells' axis."""
-    return jax.make_mesh((n_shards,), ("cells",))
+    return make_mesh((n_shards,), ("cells",))

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import valid_cells
+from repro.dist import compat as dist_compat
 from repro.dist import sharding as shd
 from repro.launch import input_specs as ispec
 from repro.launch.mesh import make_production_mesh
@@ -158,7 +159,7 @@ def run_snn(multi_pod: bool, exchange: str = "halo") -> dict:
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     n = mesh.size
-    flat = jax.make_mesh((n,), ("cells",))
+    flat = dist_compat.make_mesh((n,), ("cells",))
     gx = 32 if multi_pod else 16
     gy = n // gx
     cfg = GridConfig(grid_x=gx, grid_y=gy)

@@ -1,0 +1,84 @@
+"""Per-phase profiler consistency (repro.bench.profile) on a small grid.
+
+Checks the properties the benchmark reports rely on: phase times sum to
+~the loop wall-clock (nothing substantial is left untimed), counters and
+raster signatures are layout-invariant (the paper's Table 1 check), and
+the profiler agrees with the plain engine on the physics.
+"""
+import jax
+import numpy as np
+
+from repro.bench import profile as BP
+from repro.bench import timing
+from repro.core import engine, observables
+from repro.core.params import EngineConfig, GridConfig
+
+CFG = GridConfig(grid_x=1, grid_y=2, neurons_per_column=100,
+                 synapses_per_neuron=50)
+STEPS = 30
+
+
+class TestProfileCell:
+    def test_phase_times_sum_to_total(self):
+        cell = BP.profile_cell(CFG, EngineConfig(n_shards=2), STEPS)
+        total = cell["phase_a_s"] + cell["exchange_s"] + cell["phase_b_s"]
+        assert cell["phases_sum_s"] > 0
+        assert abs(total - cell["phases_sum_s"]) < 1e-6
+        # untimed per-step bookkeeping must stay a small fraction of wall
+        assert cell["phases_sum_s"] <= cell["wall_s"] * 1.001
+        assert cell["phases_sum_s"] >= cell["wall_s"] * 0.5
+
+    def test_layout_invariance_and_engine_agreement(self):
+        # reference: the engine's own fused runner at H=1
+        spec, plan, state = engine.build(CFG, EngineConfig(n_shards=1))
+        _, raster, _ = jax.jit(
+            lambda s: engine.run(spec, plan, s, 0, STEPS))(state)
+        ref_sig = observables.raster_signature(
+            np.asarray(raster), np.asarray(plan.gid)).hex()
+        ref_spikes = int(np.asarray(raster).sum())
+
+        cells = {}
+        for ex in BP.EXCHANGES:
+            for pl in BP.PLACEMENTS:
+                eng = EngineConfig(n_shards=2, exchange=ex, placement=pl)
+                cells[f"{ex}_{pl}"] = BP.profile_cell(CFG, eng, STEPS)
+        for key, c in cells.items():
+            assert c["raster_sig"] == ref_sig, key
+            assert c["spikes"] == ref_spikes, key
+        arr = {k: c["arrivals"] for k, c in cells.items()}
+        assert len(set(arr.values())) == 1, arr
+
+    def test_hlo_cost_positive_and_mode_sensitive(self):
+        ag = BP.profile_cell(CFG, EngineConfig(n_shards=2,
+                                               exchange="allgather"), 5)
+        halo = BP.profile_cell(CFG, EngineConfig(n_shards=2,
+                                                 exchange="halo"), 5)
+        assert ag["hlo_bytes"] > 0 and halo["hlo_bytes"] > 0
+        # the AER pack/sort/concat pipeline must leave a footprint
+        assert halo["hlo_bytes"] != ag["hlo_bytes"]
+
+
+class TestTiming:
+    def test_time_fn_median_and_spread(self):
+        t = timing.Timing(reps_s=(0.2, 0.1, 0.4))
+        assert t.median_s == 0.2
+        assert t.min_s == 0.1 and t.max_s == 0.4
+        assert abs(t.spread - (0.3 / 0.2)) < 1e-9
+        even = timing.Timing(reps_s=(0.1, 0.3))
+        assert abs(even.median_s - 0.2) < 1e-9
+
+    def test_time_fn_blocks_and_counts_reps(self):
+        calls = []
+
+        def f(x):
+            calls.append(1)
+            return x * 2
+
+        t = timing.time_fn(f, np.ones(4), reps=3, warmup=2)
+        assert len(calls) == 5
+        assert len(t.reps_s) == 3 and t.median_s >= 0
+
+    def test_norm_seconds_is_paper_metric(self):
+        # 1 s wall, 1000 synapses, 100 steps (0.1 sim-s), 10 Hz
+        got = timing.norm_seconds(1.0, 1000, 100, 10.0)
+        assert abs(got - 1.0 / (1000 * 0.1 * 10.0)) < 1e-12

@@ -1,0 +1,157 @@
+"""Bench report schema + baseline comparator (repro.bench.report).
+
+The comparator is the CI regression gate: deterministic drift must be a
+hard failure, wall-clock drift only a warning, and hlo_* drift must
+downgrade to a warning when the baseline was produced under another jax
+version.
+"""
+import copy
+
+from repro.bench import report as R
+
+
+def _report(name="unit", **over):
+    rep = R.make_report(
+        name,
+        config=dict(grid="2x2", steps=10, quick=True),
+        deterministic=dict(spikes=123, raster_sig="abcd", flag=True,
+                           hlo_bytes_x=456789),
+        wall=dict(wall_s=1.25, steps_per_s=8.0),
+        extra=dict(rows=[{"grid": "2x2"}]))
+    rep.update(over)
+    return rep
+
+
+class TestSchema:
+    def test_valid_report_has_no_errors(self):
+        assert R.validate(_report()) == []
+
+    def test_missing_section_flagged(self):
+        rep = _report()
+        del rep["deterministic"]
+        assert any("deterministic" in e for e in R.validate(rep))
+
+    def test_float_deterministic_rejected(self):
+        rep = _report()
+        rep["deterministic"]["rate"] = 27.5
+        assert any("rate" in e for e in R.validate(rep))
+
+    def test_non_numeric_wall_rejected(self):
+        rep = _report()
+        rep["wall"]["wall_s"] = "fast"
+        assert any("wall_s" in e for e in R.validate(rep))
+
+    def test_schema_version_mismatch_flagged(self):
+        rep = _report(schema_version=R.SCHEMA_VERSION + 1)
+        assert any("schema_version" in e for e in R.validate(rep))
+
+    def test_save_load_round_trip(self, tmp_path):
+        rep = _report()
+        path = R.save(rep, str(tmp_path))
+        assert path.endswith("BENCH_unit.json")
+        assert R.load(path) == rep
+        assert R.load_dir(str(tmp_path)) == {"unit": rep}
+
+    def test_save_refuses_invalid(self, tmp_path):
+        rep = _report()
+        rep["deterministic"]["bad"] = 1.5
+        try:
+            R.save(rep, str(tmp_path))
+        except ValueError:
+            return
+        raise AssertionError("save() accepted an invalid report")
+
+
+class TestCompare:
+    def test_identical_reports_pass(self):
+        rep = _report()
+        res = R.compare(copy.deepcopy(rep), rep)
+        assert res.ok and not res.warnings
+
+    def test_deterministic_drift_fails(self):
+        base = _report()
+        cur = copy.deepcopy(base)
+        cur["deterministic"]["spikes"] = 124
+        res = R.compare(cur, base)
+        assert not res.ok
+        assert any("spikes" in f for f in res.failures)
+
+    def test_raster_sig_drift_fails(self):
+        base = _report()
+        cur = copy.deepcopy(base)
+        cur["deterministic"]["raster_sig"] = "beef"
+        assert not R.compare(cur, base).ok
+
+    def test_missing_deterministic_metric_fails(self):
+        base = _report()
+        cur = copy.deepcopy(base)
+        del cur["deterministic"]["spikes"]
+        assert not R.compare(cur, base).ok
+
+    def test_wall_drift_warns_but_passes(self):
+        base = _report()
+        cur = copy.deepcopy(base)
+        cur["wall"]["wall_s"] = base["wall"]["wall_s"] * 3
+        res = R.compare(cur, base, wall_tol=0.5)
+        assert res.ok
+        assert any("wall_s" in w for w in res.warnings)
+
+    def test_wall_within_tolerance_is_silent(self):
+        base = _report()
+        cur = copy.deepcopy(base)
+        cur["wall"]["wall_s"] = base["wall"]["wall_s"] * 1.2
+        res = R.compare(cur, base, wall_tol=0.5)
+        assert res.ok and not res.warnings
+
+    def test_config_mismatch_fails(self):
+        base = _report()
+        cur = copy.deepcopy(base)
+        cur["config"]["steps"] = 999
+        res = R.compare(cur, base)
+        assert not res.ok
+        assert any("config" in f for f in res.failures)
+
+    def test_config_mismatch_with_list_values_reports_not_crashes(self):
+        # full-size vs quick reports carry list-valued config entries
+        # (table1 'grids', scaling '*_shards') — must not TypeError
+        base = _report()
+        base["config"]["grids"] = ["1x1", "4x4"]
+        cur = copy.deepcopy(_report())
+        cur["config"]["grids"] = ["1x1", "4x4", "8x8"]
+        res = R.compare(cur, base)
+        assert not res.ok
+        assert any("grids" in f for f in res.failures)
+
+    def test_hlo_drift_under_other_jax_downgrades_to_warning(self):
+        base = _report()
+        base["env"]["jax"] = "0.0.0-baseline"
+        cur = copy.deepcopy(_report())
+        cur["deterministic"]["hlo_bytes_x"] = 1
+        res = R.compare(cur, base)
+        assert res.ok
+        assert any("hlo_bytes_x" in w for w in res.warnings)
+
+    def test_spike_drift_under_other_jax_still_fails(self):
+        base = _report()
+        base["env"]["jax"] = "0.0.0-baseline"
+        cur = copy.deepcopy(_report())
+        cur["deterministic"]["spikes"] = 1
+        assert not R.compare(cur, base).ok
+
+
+class TestCompareDirs:
+    def test_dir_round_trip_and_missing_current(self, tmp_path):
+        basedir = tmp_path / "base"
+        curdir = tmp_path / "cur"
+        R.save(_report("a"), str(basedir))
+        R.save(_report("b"), str(basedir))
+        R.save(_report("a"), str(curdir))
+        res = R.compare_dirs(str(curdir), str(basedir))
+        assert not res.ok                       # 'b' has no current report
+        assert any("b" in f for f in res.failures)
+        R.save(_report("b"), str(curdir))
+        assert R.compare_dirs(str(curdir), str(basedir)).ok
+
+    def test_empty_baseline_dir_fails(self, tmp_path):
+        res = R.compare_dirs(str(tmp_path), str(tmp_path / "nothing"))
+        assert not res.ok

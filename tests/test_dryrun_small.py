@@ -10,6 +10,7 @@ from _mp_helpers import run_with_devices
 _CODE = """
 import jax, jax.numpy as jnp
 from repro.configs import get_smoke_config
+from repro.dist.compat import make_mesh
 from repro.dist import sharding as shd
 from repro.launch import hlo_cost
 from repro.launch import input_specs as ispec
@@ -19,7 +20,7 @@ from repro.train.train_state import TrainState
 from repro.optim import adamw
 from repro.models import lm
 
-mesh = jax.make_mesh((2, 4), ('data', 'model'))
+mesh = make_mesh((2, 4), ('data', 'model'))
 cfg = get_smoke_config({arch!r})
 
 with shd.use_mesh(mesh):

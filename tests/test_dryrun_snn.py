@@ -14,6 +14,7 @@ import jax
 assert len(jax.devices()) == 8, jax.devices()
 
 from repro.core import EngineConfig, GridConfig
+from repro.dist.compat import make_mesh
 from repro.launch import dryrun, hlo_cost
 
 # importing dryrun must not have re-forced the device count
@@ -23,7 +24,7 @@ cfg = GridConfig(grid_x=4, grid_y=2, neurons_per_column=60,
                  synapses_per_neuron=20)
 eng = EngineConfig(n_shards=8, exchange='halo')
 spec, plan, state = dryrun._snn_abstract(cfg, eng)
-mesh = jax.make_mesh((8,), ('cells',))
+mesh = make_mesh((8,), ('cells',))
 _, lowered = dryrun._snn_lower(spec, mesh, plan, state)
 compiled = lowered.compile()
 mem = compiled.memory_analysis()

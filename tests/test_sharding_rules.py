@@ -8,18 +8,19 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import sharding as shd
+from repro.dist.compat import make_mesh
 
 from _mp_helpers import run_with_devices
 
 
 def test_fit_drops_missing_axes():
-    mesh = jax.make_mesh((1,), ("model",))
+    mesh = make_mesh((1,), ("model",))
     spec = shd._fit((64, 64), [(("pod", "data"), "model")], mesh)
     assert spec == P(None, "model")
 
 
 def test_fit_drops_nondivisible():
-    mesh = jax.make_mesh((1,), ("model",))
+    mesh = make_mesh((1,), ("model",))
     # 63 not divisible by 1? always divisible by 1 -> kept
     spec = shd._fit((63,), [("model",)], mesh)
     assert spec == P("model")
