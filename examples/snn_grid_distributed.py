@@ -38,9 +38,8 @@ def main():
           f"(vs {eng.n_shards}-way all-to-all)")
 
     mesh = D.make_mesh(4)
-    plan_d = D.shard_put(mesh, plan)
     state_d = D.shard_put(mesh, state)
-    runner = D.make_sharded_run(spec, plan_d, mesh)
+    runner = D.make_sharded_run(spec, plan, mesh)
 
     print(f"phase 1: {STEPS1} ms on 4 shards ...")
     state_d, raster1, tm = runner(state_d, 0, STEPS1)

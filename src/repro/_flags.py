@@ -23,10 +23,34 @@ def subprocess_env(n_devices: int, src_path: str) -> dict:
     forced host devices (overriding any ambient forced count) and
     `src_path` prepended to PYTHONPATH so `repro` imports uninstalled.
 
-    Shared by tests/_mp_helpers.py and benchmarks/_util.py so their
-    subprocess environments cannot drift apart."""
+    Shared by tests/_mp_helpers.py, repro.bench.subproc and
+    repro.cluster.local so their subprocess environments cannot drift
+    apart."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = force_host_device_count(
         n_devices, env.get("XLA_FLAGS", ""))
     env["PYTHONPATH"] = src_path + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+# Coordinator wiring for multi-process (cluster) workers.  The names are
+# repo-private so an ambient MPI/SLURM environment can never half-configure
+# a worker; repro.cluster.runtime reads exactly these three.
+ENV_COORD = "REPRO_CLUSTER_COORD"        # "host:port" of process 0
+ENV_NUM_PROCS = "REPRO_CLUSTER_NPROCS"   # total process count
+ENV_PROC_ID = "REPRO_CLUSTER_PROC_ID"    # this worker's rank
+
+
+def cluster_env(n_devices: int, src_path: str, *, coordinator: str,
+                num_processes: int, process_id: int) -> dict:
+    """`subprocess_env` plus the coordinator variables a cluster worker
+    needs to join a `jax.distributed` job, and gloo CPU collectives so
+    cross-process `ppermute`/`all_gather` work on the host backend (the
+    variable is ignored by jax versions without the option and by non-CPU
+    backends)."""
+    env = subprocess_env(n_devices, src_path)
+    env[ENV_COORD] = coordinator
+    env[ENV_NUM_PROCS] = str(num_processes)
+    env[ENV_PROC_ID] = str(process_id)
+    env.setdefault("JAX_CPU_COLLECTIVES_IMPLEMENTATION", "gloo")
     return env

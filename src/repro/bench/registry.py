@@ -54,6 +54,11 @@ def _scaling(quick):
     return scaling.run_suite(quick)
 
 
+def _cluster_scaling(quick):
+    from ..cluster import cli as cluster_cli
+    return cluster_cli.sweep_report(quick=quick)
+
+
 BENCHES: Dict[str, Entry] = {e.name: e for e in [
     Entry("profile", _profile,
           "per-phase compute/exchange/arborization split, "
@@ -71,6 +76,9 @@ BENCHES: Dict[str, Entry] = {e.name: e for e in [
     Entry("scaling", _scaling,
           "strong/weak scaling, fresh interpreter per H "
           "(paper Figs 3-1/3-2)", slow=True),
+    Entry("cluster_scaling", _cluster_scaling,
+          "strong scaling over REAL process counts, fixed total shards "
+          "(paper Figs 5-8; repro.cluster)", slow=True),
 ]}
 
 

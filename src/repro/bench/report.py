@@ -41,9 +41,13 @@ _DET_TYPES = (int, str, bool)
 
 def environment() -> dict:
     import jax
+    # process_count distinguishes reports produced inside a cluster worker
+    # (repro.cluster) from single-process ones; like every env key except
+    # the jax version, it is recorded, never gated.
     return dict(jax=jax.__version__,
                 backend=jax.default_backend(),
                 device_count=jax.device_count(),
+                process_count=jax.process_count(),
                 python=_platform.python_version(),
                 platform=sys.platform)
 

@@ -9,6 +9,7 @@ from __future__ import annotations
 import os
 import subprocess
 import sys
+from typing import Optional
 
 import repro
 from repro._flags import subprocess_env
@@ -18,21 +19,50 @@ from repro._flags import subprocess_env
 # so subprocess code imports `repro` even when the parent runs uninstalled.
 SRC = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
 
+# Callers that don't pass a timeout get this, overridable per-environment
+# (slow CI runners, fast local boxes) without touching call sites.
+TIMEOUT_ENV = "REPRO_SUBPROC_TIMEOUT"
+DEFAULT_TIMEOUT = 1800.0
+
+
+class SubprocessError(RuntimeError):
+    """A bench/test subprocess failed or timed out.
+
+    `returncode` is the child's exit code (None on timeout), so callers
+    can distinguish a crash (negative = signal) from a failed assertion
+    without parsing the message."""
+
+    def __init__(self, msg: str, returncode: Optional[int] = None,
+                 stdout: str = "", stderr: str = ""):
+        self.returncode = returncode
+        self.stdout = stdout
+        self.stderr = stderr
+        super().__init__(msg)
+
 
 def _tail(stream, limit: int = 2000) -> str:
     if stream is None:
         return "<no output captured>"
     if isinstance(stream, bytes):
         stream = stream.decode("utf-8", errors="replace")
-    return stream[-limit:]
+    return stream[-limit:] if stream else "<no output captured>"
 
 
-def run_subprocess(code: str, n_devices: int = 1, timeout: int = 1800,
-                   extra_env=None) -> str:
+def resolve_timeout(timeout: Optional[float]) -> float:
+    """Explicit timeout, else $REPRO_SUBPROC_TIMEOUT, else the default."""
+    if timeout is not None:
+        return timeout
+    return float(os.environ.get(TIMEOUT_ENV, DEFAULT_TIMEOUT))
+
+
+def run_subprocess(code: str, n_devices: int = 1,
+                   timeout: Optional[float] = None, extra_env=None) -> str:
     """Run `code` in a fresh interpreter with `n_devices` forced host
-    devices; returns its stdout.  On timeout the child is killed and the
-    captured stdout/stderr tails are surfaced in the raised error (a bare
-    `TimeoutExpired` would lose them)."""
+    devices; returns its stdout.  On timeout the child is killed; on any
+    failure the raised `SubprocessError` carries the exit code and the
+    stdout/stderr tails (a bare `TimeoutExpired`/`CalledProcessError`
+    would lose them)."""
+    timeout = resolve_timeout(timeout)
     env = subprocess_env(n_devices, SRC)
     env.update(extra_env or {})
     try:
@@ -40,12 +70,17 @@ def run_subprocess(code: str, n_devices: int = 1, timeout: int = 1800,
                              capture_output=True, text=True, env=env,
                              timeout=timeout)
     except subprocess.TimeoutExpired as e:
-        raise RuntimeError(
+        raise SubprocessError(
             f"bench subprocess timed out after {timeout}s\n"
             f"stdout tail:\n{_tail(e.stdout)}\n"
-            f"stderr tail:\n{_tail(e.stderr)}") from e
+            f"stderr tail:\n{_tail(e.stderr)}",
+            returncode=None, stdout=_tail(e.stdout),
+            stderr=_tail(e.stderr)) from e
     if out.returncode != 0:
-        raise RuntimeError(f"bench subprocess failed "
-                           f"(rc={out.returncode}):\n{out.stdout}\n"
-                           f"{out.stderr}")
+        raise SubprocessError(
+            f"bench subprocess failed with exit code {out.returncode}:\n"
+            f"stdout tail:\n{_tail(out.stdout)}\n"
+            f"stderr tail:\n{_tail(out.stderr)}",
+            returncode=out.returncode, stdout=out.stdout or "",
+            stderr=out.stderr or "")
     return out.stdout

@@ -26,7 +26,6 @@ cfg = GridConfig(grid_x={gx}, grid_y={gy}, neurons_per_column={npc})
 eng = EngineConfig(n_shards=H, exchange={exchange!r})
 spec, plan, state = build(cfg, eng)
 mesh = D.make_mesh(H)
-plan = D.shard_put(mesh, plan)
 state = D.shard_put(mesh, state)
 runner = D.make_sharded_run(spec, plan, mesh)
 s2, raster, tm = runner(state, 0, {steps})       # compile
@@ -42,9 +41,12 @@ print("RESULT", wall, rate, sig.hex()[:16])
 """
 
 
-def _run_point(H, gx, gy, npc, steps, exchange="allgather"):
+def _run_point(H, gx, gy, npc, steps, exchange="allgather", timeout=None):
+    # timeout=None defers to $REPRO_SUBPROC_TIMEOUT / the subproc default,
+    # so slow CI runners can stretch every point without code changes.
     out = run_subprocess(_POINT.format(H=H, gx=gx, gy=gy, npc=npc,
-                                       steps=steps, exchange=exchange), H)
+                                       steps=steps, exchange=exchange), H,
+                         timeout=timeout)
     for line in out.splitlines():
         if line.startswith("RESULT"):
             _, wall, rate, sig = line.split()

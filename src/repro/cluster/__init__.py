@@ -1,0 +1,27 @@
+"""repro.cluster — true multi-process execution of the DPSNN engine.
+
+The paper runs DPSNN-STDP as N communicating MPI processes on a commodity
+cluster; everything else in this repo distributes *within* one process
+(vmap logical shards, shard_map over forced host devices).  This package
+crosses the process boundary:
+
+  runtime — `jax.distributed` bootstrap from env vars (no-op for
+      single-process callers) + host-gather helpers.
+  local — a localhost process launcher: the paper's "small-scale commodity
+      cluster" in miniature.  Spawns N workers with per-process env wiring
+      (coordinator address, forced device counts), collects their stdout,
+      reaps the survivors when any worker fails.
+  worker — the per-process entry point: joins the job, builds its shards,
+      runs the engine over the process-spanning `cells` mesh, reports
+      per-phase timings and the globally-gathered raster signature.
+  report — aggregates worker results into strong/weak-scaling rows and a
+      BENCH-schema report (`repro.bench.report`), gated in CI.
+  cli — `python -m repro.cluster run|sweep`.
+
+The headline invariant is the paper's Table 1 check extended across the
+process axis: rasters are bit-identical for 1 process x H shards vs
+P processes x H/P shards (tests/test_cluster_smoke.py).
+"""
+from . import local, report, runtime
+
+__all__ = ["local", "report", "runtime"]

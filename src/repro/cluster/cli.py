@@ -1,0 +1,163 @@
+"""`python -m repro.cluster` — run the engine across real processes.
+
+  python -m repro.cluster run --nprocs 2 [--shards H] [--grid 2x2] ...
+      one multi-process run on localhost; verifies the gathered raster is
+      bit-identical to the single-process engine for the same config.
+
+  python -m repro.cluster sweep [--nprocs-list 1,2] [--quick] [--out DIR]
+      strong-scaling over process counts at fixed total shards H: every
+      point must produce the identical raster (paper Table 1 across the
+      process axis) and reports per-process phase A / exchange / phase B
+      walls (paper Figs. 5-8), written as BENCH_cluster_scaling.json.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import local
+from . import report as crep
+from . import worker as cworker
+
+
+def workload_namespace(**kw):
+    """Workload namespace with worker defaults, overridden by `kw`."""
+    ap = argparse.ArgumentParser()
+    cworker.add_workload_args(ap)
+    args = ap.parse_args([])
+    for k, v in kw.items():
+        setattr(args, k, v)
+    return args
+
+
+def run_point(args, nprocs: int, timeout: float = 900.0) -> dict:
+    """Launch one `nprocs`-process run of the workload in `args`; returns
+    the aggregated scaling row."""
+    H = args.shards
+    if H % nprocs != 0:
+        raise ValueError(f"shards {H} not divisible by nprocs {nprocs}")
+    cmd = ["-m", "repro.cluster.worker", *cworker.workload_argv(args)]
+    outputs = local.launch(cmd, nprocs=nprocs,
+                           devices_per_proc=H // nprocs, timeout=timeout)
+    return crep.summarize_point(crep.parse_worker_outputs(outputs))
+
+
+def reference_signature(args) -> str:
+    """Raster signature from the single-process vmap engine for the same
+    (seed, grid) config — the ground truth `run --verify` compares with.
+    Runs on this process's single default device (logical shards only)."""
+    import numpy as np
+
+    from ..core import EngineConfig, GridConfig, build, checkpoint
+    from ..core import engine as eng_mod
+    from ..core import observables
+
+    gx, gy = (int(v) for v in args.grid.split("x"))
+    cfg = GridConfig(grid_x=gx, grid_y=gy,
+                     neurons_per_column=args.neurons_per_column,
+                     synapses_per_neuron=args.synapses, seed=args.seed)
+    eng = EngineConfig(n_shards=args.shards, exchange=args.exchange,
+                       placement=args.placement)
+    spec, plan, state = build(cfg, eng)
+    t0 = 0
+    if getattr(args, "ckpt", None):
+        state, t0 = checkpoint.load(args.ckpt, spec, plan)
+    _, raster, _ = eng_mod.run(spec, plan, state, t0, args.steps)
+    return observables.raster_signature(np.asarray(raster),
+                                        np.asarray(plan.gid)).hex()
+
+
+def cmd_run(args) -> int:
+    if args.shards is None:
+        args.shards = args.nprocs
+    row = run_point(args, args.nprocs, timeout=args.timeout)
+    print(f"[cluster] {args.nprocs} procs x "
+          f"{args.shards // args.nprocs} shards: wall {row['wall_s']}s, "
+          f"rate {row['rate_hz']} Hz, raster {row['raster_sig'][:16]}...")
+    for pp in row["per_proc"]:
+        print(f"[cluster]   proc {pp['proc']}: " + ", ".join(
+            f"{k}={pp[k]}" for k in pp if k != "proc"))
+    if args.verify:
+        ref = reference_signature(args)
+        if ref != row["raster_sig"]:
+            print(f"[cluster] FAIL: raster differs from single-process "
+                  f"engine ({row['raster_sig'][:16]} != {ref[:16]})")
+            return 1
+        print("[cluster] verify OK: bit-identical to the single-process "
+              "engine")
+    return 0
+
+
+def sweep_report(quick: bool = False, nprocs_list=None, out: str = None,
+                 timeout: float = 900.0) -> dict:
+    """Run the strong-scaling sweep; returns (and optionally writes) the
+    BENCH report.  Total shards H = max process count, so the 1-process
+    point runs H local shards and the P-process point H/P each — the
+    ISSUE's headline invariant."""
+    from ..bench import report as bench_report
+
+    nprocs_list = sorted(nprocs_list or [1, 2])
+    args = workload_namespace(
+        grid="2x2",
+        neurons_per_column=60 if quick else 150,
+        synapses=25 if quick else 60,
+        steps=60 if quick else 150,
+        phase_steps=15 if quick else 40,
+        shards=max(nprocs_list))
+    rows = []
+    for p in nprocs_list:
+        row = run_point(args, p, timeout=timeout)
+        print(f"[cluster] point nprocs={p}: wall {row['wall_s']}s "
+              f"sig {row['raster_sig'][:16]}", flush=True)
+        rows.append(row)
+    sigs = {r["raster_sig"] for r in rows}
+    if len(sigs) != 1:
+        raise RuntimeError(
+            f"paper Table 1 invariant violated across the process axis: "
+            f"{[(r['nprocs'], r['raster_sig'][:16]) for r in rows]}")
+    config = dict(quick=quick, nprocs=nprocs_list, shards=args.shards,
+                  grid=args.grid, neurons_per_column=args.neurons_per_column,
+                  synapses=args.synapses, steps=args.steps,
+                  phase_steps=args.phase_steps, exchange=args.exchange,
+                  placement=args.placement)
+    rep = crep.scaling_report(rows, config)
+    if out:
+        path = bench_report.save(rep, out)
+        print(f"[cluster] wrote {path}")
+    return rep
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.cluster",
+                                 description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    rp = sub.add_parser("run", help="one multi-process run on localhost")
+    rp.add_argument("--nprocs", type=int, default=2)
+    cworker.add_workload_args(rp)
+    rp.set_defaults(shards=None)
+    rp.add_argument("--timeout", type=float, default=900.0)
+    rp.add_argument("--no-verify", dest="verify", action="store_false",
+                    help="skip the single-process bit-identity check")
+
+    sp = sub.add_parser("sweep", help="strong scaling over process counts")
+    sp.add_argument("--nprocs-list", default="1,2",
+                    help="comma-separated process counts (default 1,2)")
+    sp.add_argument("--quick", action="store_true",
+                    help="CI-sized workload")
+    sp.add_argument("--out", default="results/cluster",
+                    help="directory for BENCH_cluster_scaling.json")
+    sp.add_argument("--timeout", type=float, default=900.0,
+                    help="per-point launch timeout (seconds)")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "run":
+        return cmd_run(args)
+    nprocs_list = [int(v) for v in args.nprocs_list.split(",") if v]
+    sweep_report(quick=args.quick, nprocs_list=nprocs_list, out=args.out,
+                 timeout=args.timeout)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,146 @@
+"""Localhost process launcher — the paper's "small-scale commodity
+cluster" in miniature.
+
+Spawns N worker interpreters, each wired with the coordinator address and
+its own forced host-device count (via the last-flag-wins `XLA_FLAGS`
+append in `repro._flags`), collects their merged stdout/stderr, and reaps
+the survivors as soon as any worker fails or the deadline passes — a hung
+collective must never hang the parent.
+
+This module is deliberately jax-free: the parent that launches a cluster
+(pytest, the CLI, a bench suite) must keep its own single default device.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+from typing import List, Optional, Sequence
+
+import repro
+from .._flags import cluster_env
+
+# src/ directory containing the `repro` package, exported on the child
+# PYTHONPATH so workers import `repro` even when the parent runs
+# uninstalled (same derivation as repro.bench.subproc).
+SRC = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+
+_TAIL = 2000
+
+
+class LaunchError(RuntimeError):
+    """A worker failed or the launch timed out.
+
+    Attributes: `returncodes` (per-process, None = still running when
+    reaped) and `outputs` (per-process merged stdout/stderr, possibly
+    partial)."""
+
+    def __init__(self, msg: str, returncodes: Sequence[Optional[int]],
+                 outputs: Sequence[str]):
+        self.returncodes = list(returncodes)
+        self.outputs = list(outputs)
+        tails = "\n".join(
+            f"--- proc {i} (rc={rc}) ---\n{out[-_TAIL:] or '<no output>'}"
+            for i, (rc, out) in enumerate(zip(returncodes, outputs)))
+        super().__init__(f"{msg}\n{tails}")
+
+
+def free_port() -> int:
+    """An OS-assigned free TCP port for the coordinator service."""
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def spawn_supported() -> bool:
+    """Static check that this platform can run the localhost cluster at
+    all (tests additionally probe a live 2-process job before relying on
+    it — see tests/test_cluster_smoke.py)."""
+    return os.name == "posix" and bool(sys.executable)
+
+
+def _reap(procs) -> None:
+    """Terminate, then kill, every still-running worker."""
+    for p in procs:
+        if p.poll() is None:
+            p.terminate()
+    deadline = time.monotonic() + 5.0
+    for p in procs:
+        if p.poll() is None:
+            try:
+                p.wait(timeout=max(0.1, deadline - time.monotonic()))
+            except subprocess.TimeoutExpired:
+                p.kill()
+                p.wait()
+
+
+def launch(cmd: Sequence[str], nprocs: int, devices_per_proc: int = 1,
+           timeout: float = 900.0, port: Optional[int] = None,
+           extra_env: Optional[dict] = None, echo: bool = False
+           ) -> List[str]:
+    """Run `cmd` (argv after the interpreter, e.g. `["-m",
+    "repro.cluster.worker", ...]`) as `nprocs` coordinated processes.
+
+    Returns the per-process merged stdout/stderr once all exit 0.  On any
+    nonzero exit or timeout, every surviving worker is reaped and a
+    `LaunchError` carries the per-process exit codes and output tails.
+    """
+    if nprocs < 1:
+        raise ValueError(f"nprocs must be >= 1, got {nprocs}")
+    coordinator = f"127.0.0.1:{port or free_port()}"
+    procs, files = [], []
+    try:
+        for pid in range(nprocs):
+            env = cluster_env(devices_per_proc, SRC, coordinator=coordinator,
+                              num_processes=nprocs, process_id=pid)
+            env.update(extra_env or {})
+            f = tempfile.TemporaryFile(mode="w+", encoding="utf-8",
+                                       errors="replace")
+            files.append(f)
+            procs.append(subprocess.Popen(
+                [sys.executable, *cmd], stdout=f, stderr=subprocess.STDOUT,
+                env=env, text=True))
+
+        deadline = time.monotonic() + timeout
+        pending = set(range(nprocs))
+        failed = timed_out = False
+        while pending and not failed:
+            for i in sorted(pending):
+                rc = procs[i].poll()
+                if rc is not None:
+                    pending.discard(i)
+                    if rc != 0:
+                        failed = True
+                        break
+            if pending and not failed:
+                if time.monotonic() > deadline:
+                    timed_out = True
+                    break
+                time.sleep(0.05)
+
+        if failed or timed_out:
+            _reap(procs)
+        outputs = []
+        for f in files:
+            f.seek(0)
+            outputs.append(f.read())
+        if failed or timed_out:
+            reason = (f"cluster launch timed out after {timeout:.0f}s"
+                      if timed_out else "cluster worker failed")
+            raise LaunchError(
+                f"{reason} ({nprocs} procs x {devices_per_proc} devices, "
+                f"cmd={list(cmd)!r})",
+                [p.poll() for p in procs], outputs)
+    finally:
+        _reap(procs)
+        for f in files:
+            f.close()
+
+    if echo:
+        for i, out in enumerate(outputs):
+            for line in out.splitlines():
+                print(f"[p{i}] {line}")
+    return outputs

@@ -1,0 +1,95 @@
+"""Aggregate per-process worker results into scaling rows and a
+BENCH-schema report.
+
+Workers emit one `CLUSTER_RESULT {json}` line each (repro.cluster.worker);
+`summarize_point` folds the P lines of one launch into a single row —
+cross-checking that every process computed the same globally-gathered
+raster signature — and `scaling_report` turns a sweep's rows into the
+`BENCH_cluster_scaling.json` document that rides the existing
+`repro.bench.report` schema and CI comparator: raster signatures gate
+hard (the paper's Table 1 invariant over the process axis), per-process
+phase A / exchange / phase B walls are tolerance-only (paper Figs. 5-8).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Sequence
+
+from ..bench import report as bench_report
+from .worker import RESULT_PREFIX
+
+PHASE_KEYS = ("phase_a_s", "exchange_s", "phase_b_s")
+
+
+def parse_worker_outputs(outputs: Sequence[str]) -> List[dict]:
+    """One result dict per worker stdout, ordered by process id."""
+    results = []
+    for i, out in enumerate(outputs):
+        lines = [ln for ln in out.splitlines()
+                 if ln.startswith(RESULT_PREFIX)]
+        if len(lines) != 1:
+            raise ValueError(f"worker {i}: expected exactly one "
+                             f"{RESULT_PREFIX!r} line, got {len(lines)}:\n"
+                             f"{out[-2000:]}")
+        results.append(json.loads(lines[0][len(RESULT_PREFIX):]))
+    return sorted(results, key=lambda r: r["proc"])
+
+
+def summarize_point(results: List[dict]) -> dict:
+    """Fold one launch's per-process results into a scaling row.
+
+    Wall time is the max over processes (the job is done when the slowest
+    process is); per-phase walls keep both the max and the per-process
+    breakdown.  Raster signatures must agree across processes — each
+    gathered the same global raster."""
+    if not results:
+        raise ValueError("no worker results")
+    sigs = {r["raster_sig"] for r in results}
+    if len(sigs) != 1:
+        raise ValueError(f"raster signatures diverge across processes: "
+                         f"{[r['raster_sig'] for r in results]}")
+    nprocs = results[0]["nprocs"]
+    if len(results) != nprocs or [r["proc"] for r in results] != list(
+            range(nprocs)):
+        raise ValueError(f"expected results from procs 0..{nprocs - 1}, "
+                         f"got {[r['proc'] for r in results]}")
+    row = dict(nprocs=nprocs, shards=results[0]["shards"],
+               steps=results[0]["steps"], t0=results[0]["t0"],
+               exchange=results[0]["exchange"],
+               placement=results[0]["placement"],
+               wall_s=max(r["wall_s"] for r in results),
+               spikes=results[0]["spikes"],
+               rate_hz=results[0]["rate_hz"],
+               raster_sig=results[0]["raster_sig"],
+               per_proc=[{k: r[k] for k in
+                          ("proc", "wall_s", *PHASE_KEYS) if k in r}
+                         for r in results])
+    for k in PHASE_KEYS:
+        if all(k in r for r in results):
+            row[k] = round(max(r[k] for r in results), 4)
+    return row
+
+
+def scaling_report(rows: List[dict], config: Dict, name: str =
+                   "cluster_scaling") -> dict:
+    """Sweep rows (one per process count, same workload) -> BENCH report.
+
+    Deterministic section: the shared raster signature, total spikes, and
+    the across-P identity flag.  Wall section: per-P end-to-end wall and
+    the per-phase maxima."""
+    if not rows:
+        raise ValueError("no scaling rows")
+    sigs = [r["raster_sig"] for r in rows]
+    deterministic = dict(
+        raster_sig=sigs[0],
+        spikes=rows[0]["spikes"],
+        identical_across_procs=(len(set(sigs)) == 1))
+    wall = {}
+    for r in rows:
+        p = r["nprocs"]
+        wall[f"p{p}_wall_s"] = r["wall_s"]
+        for k in PHASE_KEYS:
+            if k in r:
+                wall[f"p{p}_{k}"] = r[k]
+    return bench_report.make_report(name, config, deterministic, wall,
+                                    extra=dict(points=rows))

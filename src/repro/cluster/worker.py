@@ -1,0 +1,153 @@
+"""Per-process cluster worker: join the job, run shards, report.
+
+  python -m repro.cluster.worker --grid 2x2 --shards 4 --steps 100 ...
+
+Every process builds the full plan locally (construction is a pure
+function of the config — the paper's reproducible-construction property),
+places its own shards on the process-spanning `cells` mesh, and runs:
+
+  1. the fused engine (`core.distributed.make_sharded_run`) — timed
+     end-to-end, raster gathered to every host for the global signature;
+  2. optionally a phase-split loop (`make_phase_fns`) attributing
+     wall-clock to phase A / exchange / phase B *per process* — the
+     paper's Table 2 instrumentation, now across real processes.
+
+The result is one `CLUSTER_RESULT {json}` line on stdout per process;
+`repro.cluster.report` parses and aggregates them in the parent.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+RESULT_PREFIX = "CLUSTER_RESULT "
+
+
+def add_workload_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--grid", default="2x2")
+    ap.add_argument("--neurons-per-column", type=int, default=100)
+    ap.add_argument("--synapses", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--shards", type=int, default=2,
+                    help="total shards H across ALL processes")
+    ap.add_argument("--exchange", default="allgather",
+                    choices=["allgather", "halo"])
+    ap.add_argument("--placement", default="block",
+                    choices=["block", "scatter"])
+    ap.add_argument("--phase-steps", type=int, default=0,
+                    help="extra phase-split steps for per-phase timings "
+                         "(0 = skip)")
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint to restore before running (its saved "
+                         "t becomes t0)")
+
+
+def workload_argv(args) -> list:
+    """args -> worker argv tail (parent-side helper, kept next to the
+    parser so the two cannot drift)."""
+    argv = ["--grid", args.grid,
+            "--neurons-per-column", str(args.neurons_per_column),
+            "--synapses", str(args.synapses),
+            "--seed", str(args.seed),
+            "--steps", str(args.steps),
+            "--shards", str(args.shards),
+            "--exchange", args.exchange,
+            "--placement", args.placement,
+            "--phase-steps", str(args.phase_steps)]
+    if getattr(args, "ckpt", None):
+        argv += ["--ckpt", args.ckpt]
+    return argv
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.cluster.worker")
+    add_workload_args(ap)
+    args = ap.parse_args(argv)
+
+    # join the job BEFORE anything touches jax devices
+    from . import runtime
+    runtime.ensure_initialized()
+
+    import jax
+    import numpy as np
+
+    from ..core import (EngineConfig, GridConfig, build, checkpoint,
+                        observables)
+    from ..core import distributed as D
+    from ..dist import mesh as dist_mesh
+    from ..dist import sharding as dist_sharding
+
+    H = args.shards
+    if jax.device_count() != H:
+        raise SystemExit(
+            f"worker: global device count {jax.device_count()} != shards "
+            f"{H} (launcher must set devices_per_proc = H / nprocs)")
+
+    gx, gy = (int(v) for v in args.grid.split("x"))
+    cfg = GridConfig(grid_x=gx, grid_y=gy,
+                     neurons_per_column=args.neurons_per_column,
+                     synapses_per_neuron=args.synapses, seed=args.seed)
+    eng = EngineConfig(n_shards=H, exchange=args.exchange,
+                       placement=args.placement)
+    spec, plan, state = build(cfg, eng)
+    t0 = 0
+    if args.ckpt:
+        state, t0 = checkpoint.load(args.ckpt, spec, plan)
+
+    mesh = dist_mesh.make_snn_mesh(H)
+    state_d = dist_sharding.shard_put(mesh, state, "cells")
+    runner = D.make_sharded_run(spec, plan, mesh)
+
+    # fused run: warmup (compile), then timed from the same initial state
+    jax.block_until_ready(runner(state_d, t0, args.steps)[1])
+    w0 = time.perf_counter()
+    _, raster, _ = runner(state_d, t0, args.steps)
+    jax.block_until_ready(raster)
+    wall_s = time.perf_counter() - w0
+
+    raster_np = runtime.gather(raster)                    # [T, H, N]
+    gid_np = np.asarray(plan.gid)
+    result = dict(
+        proc=runtime.process_index(), nprocs=runtime.process_count(),
+        shards=H, t0=t0, steps=args.steps,
+        exchange=args.exchange, placement=args.placement,
+        local_devices=jax.local_device_count(),
+        wall_s=round(wall_s, 4),
+        spikes=int(raster_np.sum()),
+        rate_hz=round(observables.mean_rate_hz(raster_np, cfg.n_neurons), 3),
+        raster_sig=observables.raster_signature(raster_np, gid_np).hex())
+
+    if args.phase_steps > 0:
+        phase_a, exchange, phase_b = D.make_phase_fns(spec, plan, mesh)
+        s = state_d                   # runner never mutates its input state
+        # warmup all three phase programs
+        s_w, spk_w, _ = phase_a(s, t0)
+        src_w = exchange(spk_w)
+        jax.block_until_ready(phase_b(s_w, src_w, t0))
+        times = dict(phase_a_s=0.0, exchange_s=0.0, phase_b_s=0.0)
+        for t in range(t0, t0 + args.phase_steps):
+            c0 = time.perf_counter()
+            s2, spiked, _ = phase_a(s, t)
+            jax.block_until_ready(spiked)
+            times["phase_a_s"] += time.perf_counter() - c0
+            c0 = time.perf_counter()
+            spiked_src = exchange(spiked)
+            jax.block_until_ready(spiked_src)
+            times["exchange_s"] += time.perf_counter() - c0
+            c0 = time.perf_counter()
+            s = phase_b(s2, spiked_src, t)
+            jax.block_until_ready(s.arr_ring)
+            times["phase_b_s"] += time.perf_counter() - c0
+        result["phase_steps"] = args.phase_steps
+        result.update({k: round(v, 4) for k, v in times.items()})
+
+    print(RESULT_PREFIX + json.dumps(result), flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

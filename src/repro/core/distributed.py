@@ -91,25 +91,54 @@ def _spiked_src_halo(spec, offsets, plan, spiked):
         & (plan.src_gid >= 0)
 
 
+def _make_exchange(spec: SimSpec, plan: ShardPlan):
+    """Per-shard exchange callable (plan_1, spiked_1) -> spiked_src_1.
+
+    Closes over host-side statics only (halo offsets / replicated gid
+    table), so the returned callable is safe inside `shard_map` bodies on
+    process-spanning meshes.  `plan` must be host-addressable."""
+    if spec.eng.exchange == "halo":
+        offsets = halo_offsets(spec, plan)
+        return lambda p1, s1: _spiked_src_halo(spec, offsets, p1, s1)
+    gid_all = jnp.asarray(np.asarray(plan.gid))   # replicated [H, N]
+    return lambda p1, s1: _spiked_src_allgather(spec, gid_all, s1, p1.src_gid)
+
+
+def _specs(plan: ShardPlan):
+    """(plan, state, per-step-timings) partition specs over `cells`."""
+    pspec = P("cells")
+    plan_specs = jax.tree.map(lambda _: pspec, plan)
+    state_specs = ShardState(*([pspec] * len(ShardState._fields)))
+    tm_specs = engine.StepTimings(spikes=pspec, arrivals=pspec)
+    return pspec, plan_specs, state_specs, tm_specs
+
+
+def _drop_lead(tree):
+    """shard_map passes [1, ...] slices; drop the leading axis."""
+    return jax.tree.map(lambda x: x[0], tree)
+
+
 def make_sharded_run(spec: SimSpec, plan: ShardPlan, mesh: Mesh):
     """Returns run(state, t0, n_steps) -> (state, raster, timings), executing
-    one shard per device of the `cells` mesh axis."""
+    one shard per device of the `cells` mesh axis.
+
+    `plan` must be HOST-addressable (the stacked tree `build` returns):
+    halo discovery reads it with numpy, and it is then placed on `mesh`
+    here and threaded through the jitted program as an *argument* — a
+    closure constant cannot span processes, and even single-process it
+    re-materializes ~50x slower on CPU (EXPERIMENTS.md §Perf)."""
     stim_k = stimulus.stim_key(spec.cfg)
-    offsets = halo_offsets(spec, plan) if spec.eng.exchange == "halo" else None
-    gid_all = jnp.asarray(plan.gid)               # replicated [H, N]
+    exchange = _make_exchange(spec, plan)
+    pspec, plan_specs, state_specs, tm_specs = _specs(plan)
+    plan_d = dist_sharding.shard_put(mesh, plan, "cells")
 
     def shard_body(plan_s, state_s, ts):
-        # shard_map passes [1, ...] slices; drop the leading axis.
-        plan_1 = jax.tree.map(lambda x: x[0], plan_s)
-        state_1 = jax.tree.map(lambda x: x[0], state_s)
+        plan_1 = _drop_lead(plan_s)
+        state_1 = _drop_lead(state_s)
 
         def step(state, t):
             state, spiked, tm = engine.phase_a(spec, plan_1, state, t, stim_k)
-            if spec.eng.exchange == "halo":
-                spiked_src = _spiked_src_halo(spec, offsets, plan_1, spiked)
-            else:
-                spiked_src = _spiked_src_allgather(spec, gid_all, spiked,
-                                                   plan_1.src_gid)
+            spiked_src = exchange(plan_1, spiked)
             state = engine.phase_b(spec, plan_1, state, spiked_src, t)
             return state, (spiked, tm)
 
@@ -118,27 +147,68 @@ def make_sharded_run(spec: SimSpec, plan: ShardPlan, mesh: Mesh):
         return (out_state, raster[:, None],
                 jax.tree.map(lambda x: x[:, None], tm))
 
-    pspec = P("cells")
-    plan_specs = jax.tree.map(lambda _: pspec, plan)
-    state_specs = ShardState(*([pspec] * len(ShardState._fields)))
-    tm_specs = engine.StepTimings(spikes=P(None, "cells"),
-                                  arrivals=P(None, "cells"))
-
-    smapped = dist_compat.shard_map(
+    # scan outputs carry a leading time axis in front of each per-call spec
+    run = jax.jit(dist_compat.shard_map(
         shard_body, mesh,
         in_specs=(plan_specs, state_specs, P()),
-        out_specs=(state_specs, P(None, "cells"), tm_specs))
-
-    @jax.jit
-    def run(state, ts):
-        return smapped(plan, state, ts)
+        out_specs=(state_specs, P(None, *pspec),
+                   jax.tree.map(lambda s: P(None, *s), tm_specs))))
 
     def runner(state, t0: int, n_steps: int):
-        ts = jnp.arange(t0, t0 + n_steps, dtype=jnp.int32)
-        state, raster, tm = run(state, ts)
+        ts = dist_sharding.replicated_put(
+            mesh, jnp.arange(t0, t0 + n_steps, dtype=jnp.int32))
+        state, raster, tm = run(plan_d, state, ts)
         return state, raster, tm
 
     return runner
+
+
+def make_phase_fns(spec: SimSpec, plan: ShardPlan, mesh: Mesh):
+    """Separately-jitted shard_map'd phases over `mesh`:
+
+        (phase_a(state, t), exchange(spiked), phase_b(state, spiked_src, t))
+
+    — the real-collective analogue of `bench.profile.make_phase_fns`, used
+    by `repro.cluster` to attribute wall-clock to phase A / spike exchange
+    / phase B per process (paper Table 2, across the process axis).  The
+    placed plan is bound into each returned fn as a jit argument; `plan`
+    must be host-addressable, as in `make_sharded_run`."""
+    stim_k = stimulus.stim_key(spec.cfg)
+    exchange = _make_exchange(spec, plan)
+    pspec, plan_specs, state_specs, tm_specs = _specs(plan)
+    plan_d = dist_sharding.shard_put(mesh, plan, "cells")
+
+    def a_body(plan_s, state_s, t):
+        state_1, spiked, tm = engine.phase_a(
+            spec, _drop_lead(plan_s), _drop_lead(state_s), t, stim_k)
+        return (jax.tree.map(lambda x: x[None], state_1), spiked[None],
+                jax.tree.map(lambda x: x[None], tm))
+
+    def ex_body(plan_s, spiked_s):
+        return exchange(_drop_lead(plan_s), spiked_s[0])[None]
+
+    def b_body(plan_s, state_s, spiked_src_s, t):
+        state_1 = engine.phase_b(spec, _drop_lead(plan_s),
+                                 _drop_lead(state_s), spiked_src_s[0], t)
+        return jax.tree.map(lambda x: x[None], state_1)
+
+    sm = dist_compat.shard_map
+    a_j = jax.jit(sm(a_body, mesh, in_specs=(plan_specs, state_specs, P()),
+                     out_specs=(state_specs, pspec, tm_specs)))
+    ex_j = jax.jit(sm(ex_body, mesh, in_specs=(plan_specs, pspec),
+                      out_specs=pspec))
+    b_j = jax.jit(sm(b_body, mesh,
+                     in_specs=(plan_specs, state_specs, pspec, P()),
+                     out_specs=state_specs))
+
+    def tput(x):
+        return dist_sharding.replicated_put(mesh, jnp.int32(x))
+
+    phase_a = lambda state, t: a_j(plan_d, state, tput(t))
+    exchange_fn = lambda spiked: ex_j(plan_d, spiked)
+    phase_b = lambda state, spiked_src, t: b_j(plan_d, state, spiked_src,
+                                               tput(t))
+    return phase_a, exchange_fn, phase_b
 
 
 def shard_put(mesh: Mesh, tree):

@@ -13,16 +13,17 @@ partition specs through this package:
       for replication checking moved between releases).
 """
 from . import compat, mesh, sharding
-from .compat import shard_map
-from .mesh import make_production_mesh, make_snn_mesh
-from .sharding import (NamedSharding, P, axis_size, infer_batch_spec,
-                       infer_cache_spec, infer_param_spec, shard, shard_put,
-                       tree_shardings, use_mesh)
+from .compat import process_allgather, shard_map
+from .mesh import make_production_mesh, make_snn_mesh, spans_processes
+from .sharding import (NamedSharding, P, axis_size, global_put,
+                       infer_batch_spec, infer_cache_spec, infer_param_spec,
+                       replicated_put, shard, shard_put, tree_shardings,
+                       use_mesh)
 
 __all__ = [
-    "compat", "mesh", "sharding", "shard_map",
-    "make_production_mesh", "make_snn_mesh",
-    "NamedSharding", "P", "axis_size", "infer_batch_spec",
-    "infer_cache_spec", "infer_param_spec", "shard", "shard_put",
-    "tree_shardings", "use_mesh",
+    "compat", "mesh", "sharding", "process_allgather", "shard_map",
+    "make_production_mesh", "make_snn_mesh", "spans_processes",
+    "NamedSharding", "P", "axis_size", "global_put", "infer_batch_spec",
+    "infer_cache_spec", "infer_param_spec", "replicated_put", "shard",
+    "shard_put", "tree_shardings", "use_mesh",
 ]

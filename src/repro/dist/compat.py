@@ -36,3 +36,12 @@ def make_mesh(axis_shapes, axis_names) -> Mesh:
         return jax.make_mesh(axis_shapes, axis_names)
     from jax.experimental import mesh_utils
     return Mesh(mesh_utils.create_device_mesh(axis_shapes), axis_names)
+
+
+def process_allgather(tree):
+    """Host-local numpy copy of a tree of (possibly process-spanning)
+    global arrays; a collective — every process must call it.  Lives here
+    because `multihost_utils` is still under `jax.experimental` and may
+    move like `shard_map` did."""
+    from jax.experimental import multihost_utils
+    return multihost_utils.process_allgather(tree, tiled=True)

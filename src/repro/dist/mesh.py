@@ -2,12 +2,27 @@
 
 FUNCTIONS, not module-level constants: importing this module never touches
 jax device state (the dry-run driver must set XLA_FLAGS before any jax
-initialization)."""
+initialization).
+
+Meshes are built from `jax.devices()`, which is the *global* device list:
+once `repro.cluster.runtime` has initialized `jax.distributed`, the same
+constructors return process-spanning meshes and every collective routed
+over them becomes genuine inter-process communication.  Sharding rules
+(`repro.dist.sharding`) are unchanged by this — they only name logical
+axes and never ask which process owns a device."""
 from __future__ import annotations
 
+import jax
 from jax.sharding import Mesh
 
 from .compat import make_mesh
+
+
+def spans_processes(mesh: Mesh) -> bool:
+    """True when `mesh` contains devices owned by another process (arrays
+    sharded over it are only partially addressable here)."""
+    here = jax.process_index()
+    return any(d.process_index != here for d in mesh.devices.flat)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -18,5 +33,13 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_snn_mesh(n_shards: int) -> Mesh:
-    """The SNN engine is space-parallel only: one flat 'cells' axis."""
+    """The SNN engine is space-parallel only: one flat 'cells' axis.
+
+    In a cluster job the `cells` axis runs across all processes' devices
+    (process p contributes devices [p*H/P, (p+1)*H/P) of the axis)."""
+    total = jax.device_count()
+    if n_shards > total:
+        raise ValueError(
+            f"make_snn_mesh: {n_shards} shards > {total} global devices "
+            f"(force more with XLA_FLAGS or launch more processes)")
     return make_mesh((n_shards,), ("cells",))

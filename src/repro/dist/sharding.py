@@ -279,8 +279,34 @@ def tree_shardings(tree, mesh: Mesh,
         tree)
 
 
+def global_put(mesh: Mesh, tree, pspec: P):
+    """Place a host-addressable tree onto `mesh` with partition spec
+    `pspec`, working on process-spanning meshes too.
+
+    Every process must hold the full host value (true throughout this repo:
+    construction is a pure function of the config, so all workers build
+    identical plans/states) — each then contributes just its addressable
+    shards via `make_array_from_callback`.  Local meshes keep the plain
+    `device_put` fast path."""
+    from .mesh import spans_processes
+    sh = NamedSharding(mesh, pspec)
+    if spans_processes(mesh):
+        import numpy as np
+
+        def put(x):
+            host = np.asarray(x)
+            return jax.make_array_from_callback(
+                host.shape, sh, lambda idx: host[idx])
+        return jax.tree.map(put, tree)
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
 def shard_put(mesh: Mesh, tree, axis: str = "cells"):
     """Place a stacked [H, ...] tree with each shard on its device of the
     `axis` mesh axis (the SNN engine's plan/state layout)."""
-    sh = NamedSharding(mesh, P(axis))
-    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+    return global_put(mesh, tree, P(axis))
+
+
+def replicated_put(mesh: Mesh, tree):
+    """Replicate a host-addressable tree across every device of `mesh`."""
+    return global_put(mesh, tree, P())

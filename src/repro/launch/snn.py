@@ -6,12 +6,23 @@
 
 With --shards > 1 this process must be started with
 XLA_FLAGS=--xla_force_host_platform_device_count=<H> (or run on a real
-multi-device platform).
+multi-device platform).  Under `repro.cluster.local` (the REPRO_CLUSTER_*
+env variables set), the same launcher becomes one worker of a
+multi-process job: `--shards` then counts GLOBAL shards across all
+processes, rasters are gathered for the rate report, and only process 0
+writes checkpoints.
 """
 from __future__ import annotations
 
 import argparse
 import os
+
+from repro.cluster import runtime as cluster_runtime
+
+# Joining a cluster job must precede ANY jax computation — repro.core
+# builds module-level constants (engine.NEG_TIME) at import.  No-op
+# outside a cluster job (REPRO_CLUSTER_* absent).
+cluster_runtime.ensure_initialized()
 
 import jax
 import numpy as np
@@ -44,8 +55,12 @@ def main():
                      synapses_per_neuron=args.synapses)
     eng = EngineConfig(n_shards=args.shards, exchange=args.exchange,
                        placement=args.placement, delivery=args.delivery)
-    print(f"[snn] {cfg.n_neurons} neurons / {cfg.n_synapses} synapses on "
-          f"{args.shards} shards ({args.exchange}, {args.placement})")
+    if cluster_runtime.is_primary():
+        procs = (f", {jax.process_count()} processes"
+                 if cluster_runtime.is_distributed() else "")
+        print(f"[snn] {cfg.n_neurons} neurons / {cfg.n_synapses} synapses "
+              f"on {args.shards} shards ({args.exchange}, "
+              f"{args.placement}{procs})")
 
     if args.delivery == "event":
         assert args.shards == 1, "event backend: single-process CLI path"
@@ -65,15 +80,17 @@ def main():
         latest = checkpoint.latest(args.ckpt_dir)
         if latest:
             state, t0 = checkpoint.load(latest, spec, plan)
-            print(f"[snn] resumed at t={t0} from {latest}")
+            if cluster_runtime.is_primary():
+                print(f"[snn] resumed at t={t0} from {latest}")
 
     if args.shards > 1:
+        # jax.devices() is global: across every process of a cluster job
         assert len(jax.devices()) >= args.shards, \
-            "set XLA_FLAGS=--xla_force_host_platform_device_count"
+            "set XLA_FLAGS=--xla_force_host_platform_device_count " \
+            "or launch more processes (repro.cluster.local)"
         mesh = D.make_mesh(args.shards)
-        plan_d = D.shard_put(mesh, plan)
         state_d = D.shard_put(mesh, state)
-        runner = D.make_sharded_run(spec, plan_d, mesh)
+        runner = D.make_sharded_run(spec, plan, mesh)
         chunk = args.ckpt_every or args.steps
         t = t0
         while t < t0 + args.steps:
@@ -81,10 +98,12 @@ def main():
             state_d, raster, tm = runner(state_d, t, n)
             t += n
             if args.ckpt_dir:
-                checkpoint.save(os.path.join(args.ckpt_dir,
-                                             f"ckpt_{t}.npz"),
-                                spec, plan,
-                                jax.tree.map(np.asarray, state_d), t)
+                # gather is a collective (all processes), the write is not
+                state_h = cluster_runtime.gather(state_d)
+                if cluster_runtime.is_primary():
+                    checkpoint.save(os.path.join(args.ckpt_dir,
+                                                 f"ckpt_{t}.npz"),
+                                    spec, plan, state_h, t)
         state, raster = state_d, raster
     else:
         chunk = args.ckpt_every or args.steps
@@ -93,13 +112,18 @@ def main():
             n = min(chunk, t0 + args.steps - t)
             state, raster, tm = run(spec, plan, state, t, n)
             t += n
-            if args.ckpt_dir:
+            # primary-only for the same reason as the sharded branch: a
+            # cluster job with --shards 1 runs one replica per process,
+            # and they must not race on the checkpoint path
+            if args.ckpt_dir and cluster_runtime.is_primary():
                 checkpoint.save(os.path.join(args.ckpt_dir,
                                              f"ckpt_{t}.npz"),
                                 spec, plan, state, t)
 
-    rate = observables.mean_rate_hz(np.asarray(raster), cfg.n_neurons)
-    print(f"[snn] final-window rate {rate:.1f} Hz; done at t={t} ms")
+    raster_h = cluster_runtime.gather(raster)
+    rate = observables.mean_rate_hz(np.asarray(raster_h), cfg.n_neurons)
+    if cluster_runtime.is_primary():
+        print(f"[snn] final-window rate {rate:.1f} Hz; done at t={t} ms")
 
 
 if __name__ == "__main__":

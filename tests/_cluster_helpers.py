@@ -1,0 +1,57 @@
+"""Shared capability gate for the multi-process (cluster) tests.
+
+A live 2-process probe — raw `jax.distributed` + a cross-process gather,
+no engine code — decides once per pytest session whether this platform
+can run localhost cluster jobs at all.  Tests `pytest.skip` when it
+cannot (sandboxes without fork/sockets, jax builds without CPU
+collectives), which keeps tier-1 green everywhere while CI's dedicated
+cluster-smoke job runs the real thing unconditionally.
+"""
+import pytest
+
+from _mp_helpers import SRC  # noqa: F401  (sys.path bootstrap)
+
+from repro.cluster import local
+
+# Raw-jax probe: reads the launcher's env contract directly so an engine
+# regression can never masquerade as "platform unsupported".
+_PROBE = """
+import os
+import jax
+try:
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+except Exception:
+    pass
+jax.distributed.initialize(
+    coordinator_address=os.environ["REPRO_CLUSTER_COORD"],
+    num_processes=int(os.environ["REPRO_CLUSTER_NPROCS"]),
+    process_id=int(os.environ["REPRO_CLUSTER_PROC_ID"]))
+import jax.numpy as jnp
+from jax.experimental import multihost_utils
+out = multihost_utils.process_allgather(
+    jnp.full((1,), jax.process_index()), tiled=True)
+assert out.shape[0] == jax.process_count(), out
+print("PROBE_OK", jax.process_count(), jax.device_count())
+"""
+
+_capable = None
+
+
+def require_cluster() -> None:
+    """Skip the calling test when localhost multi-process jax is
+    unavailable; cached across the session."""
+    global _capable
+    if _capable is None:
+        if not local.spawn_supported():
+            _capable = "platform cannot spawn localhost cluster workers"
+        else:
+            try:
+                outs = local.launch(["-c", _PROBE], nprocs=2,
+                                    devices_per_proc=1, timeout=300)
+                assert all("PROBE_OK 2" in o for o in outs), outs
+                _capable = True
+            except local.LaunchError as e:
+                _capable = (f"multi-process jax unavailable here: "
+                            f"{str(e)[:500]}")
+    if _capable is not True:
+        pytest.skip(_capable)

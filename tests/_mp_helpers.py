@@ -2,23 +2,19 @@
 
 jax locks the device count at first init, so multi-device checks run in a
 subprocess with XLA_FLAGS set; the parent process keeps its single device.
+Env construction and execution are delegated to `repro.bench.subproc` so
+tests, benchmarks and the cluster launcher share one implementation
+(coordinator vars + last-flag-wins XLA_FLAGS appending cannot drift).
 """
 import os
-import subprocess
 import sys
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
-from repro._flags import subprocess_env
+from repro.bench.subproc import SubprocessError, run_subprocess  # noqa: F401
 
 
-def run_with_devices(code: str, n_devices: int, timeout: int = 600) -> str:
-    env = subprocess_env(n_devices, SRC)
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=timeout)
-    if out.returncode != 0:
-        raise RuntimeError(f"subprocess failed:\nSTDOUT:\n{out.stdout}\n"
-                           f"STDERR:\n{out.stderr}")
-    return out.stdout
+def run_with_devices(code: str, n_devices: int, timeout: float = 600) -> str:
+    return run_subprocess(code, n_devices, timeout=timeout)

@@ -23,7 +23,9 @@ class TestProfileCell:
         cell = BP.profile_cell(CFG, EngineConfig(n_shards=2), STEPS)
         total = cell["phase_a_s"] + cell["exchange_s"] + cell["phase_b_s"]
         assert cell["phases_sum_s"] > 0
-        assert abs(total - cell["phases_sum_s"]) < 1e-6
+        # per-phase values are rounded to 4 decimals independently of the
+        # rounded sum, so they can legitimately disagree by ~1.5e-4
+        assert abs(total - cell["phases_sum_s"]) < 2e-4
         # untimed per-step bookkeeping must stay a small fraction of wall
         assert cell["phases_sum_s"] <= cell["wall_s"] * 1.001
         assert cell["phases_sum_s"] >= cell["wall_s"] * 0.5

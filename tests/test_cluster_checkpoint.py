@@ -1,0 +1,44 @@
+"""Checkpoint elasticity across the process axis.
+
+The checkpoint format is layout-free (neuron state keyed by gid, synapses
+by the canonical (tgt, src, j) triple), so a state saved by the
+single-process engine must restore into a 2-process x 2-shard cluster job
+and continue with a bit-identical raster."""
+import numpy as np
+import pytest
+
+from _cluster_helpers import require_cluster
+from repro.cluster import cli
+from repro.core import (EngineConfig, GridConfig, build, checkpoint,
+                        observables, run)
+
+pytestmark = pytest.mark.slow
+
+CFG = dict(grid_x=2, grid_y=2, neurons_per_column=50,
+           synapses_per_neuron=20, seed=11)
+T_SAVE, T_CONT = 40, 40
+
+
+def test_checkpoint_restores_across_processes(tmp_path):
+    require_cluster()
+    cfg = GridConfig(**CFG)
+    spec, plan, state = build(cfg, EngineConfig(n_shards=4))
+
+    # single-process: run, save at t=T_SAVE, continue for the reference
+    state, _, _ = run(spec, plan, state, 0, T_SAVE)
+    ckpt = str(tmp_path / f"ckpt_{T_SAVE}.npz")
+    checkpoint.save(ckpt, spec, plan, state, T_SAVE)
+    _, raster_cont, _ = run(spec, plan, state, T_SAVE, T_CONT)
+    ref_sig = observables.raster_signature(
+        np.asarray(raster_cont), np.asarray(plan.gid)).hex()
+
+    # cluster: restore the same checkpoint at 2 processes x 2 shards
+    args = cli.workload_namespace(
+        grid="2x2", neurons_per_column=CFG["neurons_per_column"],
+        synapses=CFG["synapses_per_neuron"], seed=CFG["seed"],
+        steps=T_CONT, shards=4, ckpt=ckpt)
+    row = cli.run_point(args, nprocs=2, timeout=600)
+
+    assert row["t0"] == T_SAVE, "worker must resume at the saved t"
+    assert row["raster_sig"] == ref_sig, \
+        "continuation raster differs after cross-process restore"

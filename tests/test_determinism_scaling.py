@@ -22,9 +22,8 @@ for H in (1, 2, 4):
         eng = EngineConfig(n_shards=H, exchange=exchange)
         spec, plan, state = build(cfg, eng)
         mesh = D.make_mesh(H)
-        plan_d = D.shard_put(mesh, plan)
         state_d = D.shard_put(mesh, state)
-        runner = D.make_sharded_run(spec, plan_d, mesh)
+        runner = D.make_sharded_run(spec, plan, mesh)
         _, raster, _ = runner(state_d, 0, 80)
         sigs[(H, exchange)] = observables.raster_signature(
             np.asarray(raster), np.asarray(plan.gid))

@@ -46,12 +46,11 @@ _, raster_ref, _ = run(spec, plan, state, 0, 120)
 sig_ref = observables.raster_signature(np.asarray(raster_ref),
                                        np.asarray(plan.gid))
 
-# distributed: one shard per device
+# distributed: one shard per device (make_sharded_run places the plan)
 mesh = D.make_mesh(4)
-plan_d = D.shard_put(mesh, plan)
 spec2, _, state_d = build(cfg, eng)
 state_d = D.shard_put(mesh, state_d)
-runner = D.make_sharded_run(spec, plan_d, mesh)
+runner = D.make_sharded_run(spec, plan, mesh)
 state_d, raster_d, tm = runner(state_d, 0, 120)
 sig_d = observables.raster_signature(np.asarray(raster_d),
                                      np.asarray(plan.gid))
