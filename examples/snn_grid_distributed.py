@@ -25,6 +25,9 @@ STEPS1, STEPS2 = 150, 150
 
 
 def main():
+    # connectivity="gaussian:sigma=1.0" (or any core.profiles spec) swaps
+    # the lateral kernel; halo depth, AER routes and the elastic-restart
+    # identity below all follow the profile's reach automatically.
     cfg = GridConfig(grid_x=2, grid_y=2, neurons_per_column=500,
                      synapses_per_neuron=100)
     eng = EngineConfig(n_shards=4, exchange="halo")

@@ -104,9 +104,22 @@ def _hlo_step_cost(fused, plan, state) -> Tuple[int, int]:
     return int(round(parsed["flops"])), int(round(parsed["bytes"]))
 
 
-def profile_cell(cfg: GridConfig, eng: EngineConfig, steps: int) -> dict:
-    """Profile one (exchange, placement) cell; returns flat metrics."""
-    spec, plan, state = engine.build(cfg, eng)
+def profile_cell(cfg: GridConfig, eng: EngineConfig, steps: int,
+                 built=None) -> dict:
+    """Profile one (exchange, placement) cell; returns flat metrics.
+
+    `built` optionally passes a prebuilt (spec, plan, state) from
+    `engine.build` for the same (cfg, shards, placement): the plan is
+    exchange-independent, so callers sweeping exchange modes (the
+    connectivity_sweep suite) skip rebuilding the synapse tables —
+    `spec.eng` is re-pointed at `eng` here."""
+    if built is None:
+        spec, plan, state = engine.build(cfg, eng)
+    else:
+        spec, plan, state = built
+        assert (spec.eng.n_shards, spec.eng.placement) == \
+            (eng.n_shards, eng.placement), "prebuilt plan layout mismatch"
+        spec = spec._replace(eng=eng)
     phase_a, exchange, phase_b, fused = make_phase_fns(spec, plan)
 
     # warmup: compile all three phase functions (t is traced, so one call

@@ -54,6 +54,11 @@ def _scaling(quick):
     return scaling.run_suite(quick)
 
 
+def _connectivity_sweep(quick):
+    from .suites import connectivity_sweep
+    return connectivity_sweep.run_suite(quick)
+
+
 def _cluster_scaling(quick):
     from ..cluster import cli as cluster_cli
     return cluster_cli.sweep_report(quick=quick)
@@ -69,6 +74,9 @@ BENCHES: Dict[str, Entry] = {e.name: e for e in [
           "H=1 compute/communication split (paper Table 2, legacy view)"),
     Entry("event_vs_dense", _event_vs_dense,
           "dense O(E) vs event-driven delivery crossover (beyond-paper)"),
+    Entry("connectivity_sweep", _connectivity_sweep,
+          "per-phase split across lateral-connectivity profiles "
+          "(ring/Gaussian/exponential; arXiv:1803.08833)"),
     Entry("lm_throughput", _lm_throughput,
           "LM substrate train/decode tokens/s (CPU micro-benchmark)"),
     Entry("roofline", _roofline,

@@ -20,7 +20,22 @@ crosses the process boundary:
 
 The headline invariant is the paper's Table 1 check extended across the
 process axis: rasters are bit-identical for 1 process x H shards vs
-P processes x H/P shards (tests/test_cluster_smoke.py).
+P processes x H/P shards (tests/test_cluster_smoke.py) — at every
+lateral-connectivity profile (`--profile`, core.profiles).
+
+Public API:
+
+  runtime.ensure_initialized(cfg=None)   join the job from REPRO_CLUSTER_*
+      env (the bootstrap; call before ANY jax computation; no-op outside
+      a cluster job, idempotent inside one)
+  runtime.gather(tree)       host-local numpy copy of process-spanning
+      arrays (a collective when multi-process)
+  runtime.is_primary() / is_distributed() / process_index() / count()
+  local.launch(cmd, nprocs, devices_per_proc)   spawn + reap N workers
+  cli: python -m repro.cluster run   one localhost multi-process job,
+      verified bit-identical against the single-process engine
+  cli: python -m repro.cluster sweep   strong scaling over process
+      counts -> BENCH_cluster_scaling.json
 """
 from . import local, report, runtime
 

@@ -55,7 +55,8 @@ def reference_signature(args) -> str:
     gx, gy = (int(v) for v in args.grid.split("x"))
     cfg = GridConfig(grid_x=gx, grid_y=gy,
                      neurons_per_column=args.neurons_per_column,
-                     synapses_per_neuron=args.synapses, seed=args.seed)
+                     synapses_per_neuron=args.synapses, seed=args.seed,
+                     connectivity=getattr(args, "profile", "ring3"))
     eng = EngineConfig(n_shards=args.shards, exchange=args.exchange,
                        placement=args.placement)
     spec, plan, state = build(cfg, eng)
@@ -68,6 +69,9 @@ def reference_signature(args) -> str:
 
 
 def cmd_run(args) -> int:
+    """`run`: one localhost multi-process job; prints the per-process
+    phase walls and (unless --no-verify) checks the gathered raster
+    bit-matches the single-process engine.  Exit 1 on a mismatch."""
     if args.shards is None:
         args.shards = args.nprocs
     row = run_point(args, args.nprocs, timeout=args.timeout)
@@ -89,11 +93,13 @@ def cmd_run(args) -> int:
 
 
 def sweep_report(quick: bool = False, nprocs_list=None, out: str = None,
-                 timeout: float = 900.0) -> dict:
+                 timeout: float = 900.0, profile: str = "ring3") -> dict:
     """Run the strong-scaling sweep; returns (and optionally writes) the
     BENCH report.  Total shards H = max process count, so the 1-process
     point runs H local shards and the P-process point H/P each — the
-    ISSUE's headline invariant."""
+    ISSUE's headline invariant.  `profile` selects the lateral-connectivity
+    kernel (repro.core.profiles); the invariant must — and does — hold at
+    every reach."""
     from ..bench import report as bench_report
 
     nprocs_list = sorted(nprocs_list or [1, 2])
@@ -103,7 +109,8 @@ def sweep_report(quick: bool = False, nprocs_list=None, out: str = None,
         synapses=25 if quick else 60,
         steps=60 if quick else 150,
         phase_steps=15 if quick else 40,
-        shards=max(nprocs_list))
+        shards=max(nprocs_list),
+        profile=profile)
     rows = []
     for p in nprocs_list:
         row = run_point(args, p, timeout=timeout)
@@ -119,7 +126,7 @@ def sweep_report(quick: bool = False, nprocs_list=None, out: str = None,
                   grid=args.grid, neurons_per_column=args.neurons_per_column,
                   synapses=args.synapses, steps=args.steps,
                   phase_steps=args.phase_steps, exchange=args.exchange,
-                  placement=args.placement)
+                  placement=args.placement, profile=args.profile)
     rep = crep.scaling_report(rows, config)
     if out:
         path = bench_report.save(rep, out)
@@ -149,13 +156,16 @@ def main(argv=None) -> int:
                     help="directory for BENCH_cluster_scaling.json")
     sp.add_argument("--timeout", type=float, default=900.0,
                     help="per-point launch timeout (seconds)")
+    sp.add_argument("--profile", default="ring3",
+                    help="lateral-connectivity profile spec "
+                         "(repro.core.profiles)")
 
     args = ap.parse_args(argv)
     if args.cmd == "run":
         return cmd_run(args)
     nprocs_list = [int(v) for v in args.nprocs_list.split(",") if v]
     sweep_report(quick=args.quick, nprocs_list=nprocs_list, out=args.out,
-                 timeout=args.timeout)
+                 timeout=args.timeout, profile=args.profile)
     return 0
 
 

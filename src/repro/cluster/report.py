@@ -57,6 +57,7 @@ def summarize_point(results: List[dict]) -> dict:
                steps=results[0]["steps"], t0=results[0]["t0"],
                exchange=results[0]["exchange"],
                placement=results[0]["placement"],
+               profile=results[0].get("profile", "ring3"),
                wall_s=max(r["wall_s"] for r in results),
                spikes=results[0]["spikes"],
                rate_hz=results[0]["rate_hz"],

@@ -38,6 +38,9 @@ def add_workload_args(ap: argparse.ArgumentParser) -> None:
                     choices=["allgather", "halo"])
     ap.add_argument("--placement", default="block",
                     choices=["block", "scatter"])
+    ap.add_argument("--profile", default="ring3",
+                    help="lateral-connectivity profile spec "
+                         "(repro.core.profiles)")
     ap.add_argument("--phase-steps", type=int, default=0,
                     help="extra phase-split steps for per-phase timings "
                          "(0 = skip)")
@@ -57,6 +60,7 @@ def workload_argv(args) -> list:
             "--shards", str(args.shards),
             "--exchange", args.exchange,
             "--placement", args.placement,
+            "--profile", args.profile,
             "--phase-steps", str(args.phase_steps)]
     if getattr(args, "ckpt", None):
         argv += ["--ckpt", args.ckpt]
@@ -90,7 +94,8 @@ def main(argv=None) -> int:
     gx, gy = (int(v) for v in args.grid.split("x"))
     cfg = GridConfig(grid_x=gx, grid_y=gy,
                      neurons_per_column=args.neurons_per_column,
-                     synapses_per_neuron=args.synapses, seed=args.seed)
+                     synapses_per_neuron=args.synapses, seed=args.seed,
+                     connectivity=args.profile)
     eng = EngineConfig(n_shards=H, exchange=args.exchange,
                        placement=args.placement)
     spec, plan, state = build(cfg, eng)
@@ -115,6 +120,7 @@ def main(argv=None) -> int:
         proc=runtime.process_index(), nprocs=runtime.process_count(),
         shards=H, t0=t0, steps=args.steps,
         exchange=args.exchange, placement=args.placement,
+        profile=args.profile,
         local_devices=jax.local_device_count(),
         wall_s=round(wall_s, 4),
         spikes=int(raster_np.sum()),

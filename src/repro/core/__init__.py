@@ -6,11 +6,12 @@ from .params import (EngineConfig, GridConfig, IzhikevichParams, StdpParams,
 from .engine import (ShardPlan, ShardState, SimSpec, build, init_state,
                      make_step_fn, run)
 from . import (aer, checkpoint, connectivity, distributed, observables,
-               stimulus, topology)
+               profiles, stimulus, topology)
 
 __all__ = [
     "EngineConfig", "GridConfig", "IzhikevichParams", "StdpParams",
     "DEFAULT_IZH", "DEFAULT_STDP", "ShardPlan", "ShardState", "SimSpec",
     "build", "init_state", "make_step_fn", "run", "aer", "checkpoint",
-    "connectivity", "distributed", "observables", "stimulus", "topology",
+    "connectivity", "distributed", "observables", "profiles", "stimulus",
+    "topology",
 ]

@@ -19,7 +19,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from . import connectivity, engine
+from . import connectivity, engine, profiles
 from .engine import ShardPlan, ShardState, SimSpec
 
 
@@ -72,10 +72,12 @@ def save(path: str, spec: SimSpec, plan: ShardPlan, state: ShardState,
         j=j.reshape(-1)[m][key_order],
         w=syn(state.w), last_arr=syn(state.last_arr), arr_ring=arr,
         t=np.int64(t))
+    prof = profiles.from_config(spec.cfg)
     meta = dict(grid_x=spec.cfg.grid_x, grid_y=spec.cfg.grid_y,
                 neurons_per_column=spec.cfg.neurons_per_column,
                 synapses_per_neuron=spec.cfg.synapses_per_neuron,
-                seed=spec.cfg.seed, t=int(t))
+                seed=spec.cfg.seed, connectivity=spec.cfg.connectivity,
+                ring_masses=list(prof.ring_masses()), t=int(t))
 
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
@@ -96,6 +98,20 @@ def load(path: str, spec: SimSpec, plan: ShardPlan
                  ("synapses_per_neuron", spec.cfg.synapses_per_neuron),
                  ("seed", spec.cfg.seed)):
         assert meta[k] == v, f"checkpoint {k} mismatch: {meta[k]} != {v}"
+    # Profile mismatch means different synapse keys — restoring would
+    # silently produce garbage.  Gate on the resolved kernel (per-ring
+    # masses fully determine the draws given seed/grid/M), NOT the raw
+    # spec string: "ring:max_ring=3" == "ring3" must load, while "ring3"
+    # under different GridConfig.ring_fractions must not.  Checkpoints
+    # from before this key carried whatever kernel the loading config
+    # implies (the old guard never checked), so absence skips the check.
+    if "ring_masses" in meta:
+        cur = list(profiles.from_config(spec.cfg).ring_masses())
+        assert meta["ring_masses"] == cur, \
+            f"checkpoint connectivity profile mismatch: saved " \
+            f"{meta.get('connectivity')!r} (ring masses " \
+            f"{meta['ring_masses']}) != current " \
+            f"{spec.cfg.connectivity!r} ({cur})"
 
     # neurons: direct gid lookup
     gid = np.asarray(plan.gid)                     # [H, N]

@@ -21,7 +21,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from . import topology
+from . import profiles, topology
 from .params import EngineConfig, GridConfig
 
 _GOLDEN = np.uint64(0x9E3779B97F4A7C15)
@@ -49,12 +49,6 @@ def _uniform01(bits: np.ndarray) -> np.ndarray:
     return (bits >> np.uint64(11)).astype(np.float64) * (2.0 ** -53)
 
 
-# Flattened ring-offset tables (rings 0..3).
-_OFF = np.concatenate([np.asarray(topology.ring_offsets(r), dtype=np.int64)
-                       for r in range(4)])           # [49, 2] (dx, dy)
-_RING_START = np.array([0, 1, 9, 25, 49], dtype=np.int64)
-
-
 @dataclasses.dataclass
 class ForwardSynapses:
     """Forward synapses of a set of source neurons; all arrays [G, M]."""
@@ -67,7 +61,14 @@ class ForwardSynapses:
 
 
 def forward_synapses(cfg: GridConfig, src_gids: np.ndarray) -> ForwardSynapses:
-    """Generate the M forward synapses of each source gid (vectorized)."""
+    """Generate the M forward synapses of each source gid (vectorized).
+
+    The lateral kernel is pluggable (`core.profiles`): the profile supplies
+    the per-ring cumulative target fractions and the flattened ring-offset
+    tables up to its reach; the four splitmix64 draw lanes are identical
+    for every profile, and for the default `ring3` profile this whole
+    function is bit-identical to the paper's hard-coded kernel.
+    """
     g = np.asarray(src_gids, dtype=np.int64)
     M = cfg.synapses_per_neuron
     counter = (g[:, None] * np.int64(M) + np.arange(M, dtype=np.int64)[None, :])
@@ -83,12 +84,14 @@ def forward_synapses(cfg: GridConfig, src_gids: np.ndarray) -> ForwardSynapses:
     cx, cy = topology.column_coords(cfg, src_col)
 
     # --- excitatory: ring via cumulative fractions, member within ring ---
-    fr = np.cumsum(np.asarray(cfg.ring_fractions, dtype=np.float64))
-    fr = fr / fr[-1]
-    ring = np.searchsorted(fr, r_ring, side="right").clip(0, 3)   # [G, M]
-    ring_size = (_RING_START[ring + 1] - _RING_START[ring])
+    prof = profiles.from_config(cfg)
+    reach = prof.reach()
+    off_tab, start = profiles.offset_tables(reach)
+    fr = prof.cum_fractions()
+    ring = np.searchsorted(fr, r_ring, side="right").clip(0, reach)  # [G, M]
+    ring_size = (start[ring + 1] - start[ring])
     member = (r_member % ring_size.astype(np.uint64)).astype(np.int64)
-    off = _OFF[_RING_START[ring] + member]            # [G, M, 2]
+    off = off_tab[start[ring] + member]               # [G, M, 2]
     tcol_exc = topology.wrap_column(cfg, cx[:, None] + off[..., 0],
                                     cy[:, None] + off[..., 1])
     n_exc_tgt = (r_tgt % np.uint64(cfg.neurons_per_column)).astype(np.int64)

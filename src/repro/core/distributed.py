@@ -39,6 +39,11 @@ def halo_offsets(spec: SimSpec, plan: ShardPlan) -> List[int]:
 
     == the paper's construction-phase discovery of "the subset of processes
     that should be listened to", derived locally from the source tables.
+    The source tables themselves are provisioned from the connectivity
+    profile's `reach()` (topology.shard_halo_columns), so the exchange
+    schedule follows the profile automatically: a ring1 kernel shrinks the
+    offset set, a gaussian one widens it (DESIGN.md §Connectivity
+    profiles) — no constant ring depth appears anywhere downstream.
     """
     H = spec.eng.n_shards
     src_gid = np.asarray(plan.src_gid)            # [H, S]

@@ -71,6 +71,12 @@ class GridConfig:
     # (Main text values; the figure caption's 3/2/1% per-column variant is
     # inconsistent with the text and is not used.)
     ring_fractions: Tuple[float, float, float, float] = (0.76, 0.12, 0.08, 0.04)
+    # Lateral-connectivity profile spec (core.profiles): "ring3" is the
+    # paper's exact kernel above (bit-identical legacy behaviour); other
+    # specs — "ring:max_ring=R", "gaussian:sigma=S", "exponential:lambda=L"
+    # — swap the kernel and with it the halo reach the distribution layer
+    # provisions.  The ring family reads `ring_fractions`.
+    connectivity: str = "ring3"
     # The paper sets initial weights "to a high strength" without giving the
     # value.  5.6 calibrates the initial-activity band to the paper's
     # Table 1 across all geometries (1x1: ~37, 2x2: 13.5, 4x4: 28.4,

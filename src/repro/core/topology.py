@@ -7,7 +7,7 @@ neuron n is excitatory iff n < n_exc_per_column.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -40,13 +40,25 @@ def wrap_column(cfg: GridConfig, cx: np.ndarray, cy: np.ndarray) -> np.ndarray:
     return (cy % cfg.grid_y) * cfg.grid_x + (cx % cfg.grid_x)
 
 
-def neighbour_columns(cfg: GridConfig, col: int, max_ring: int = 3) -> np.ndarray:
+def profile_reach(cfg: GridConfig) -> int:
+    """Halo depth of the connectivity profile `cfg` selects (the largest
+    Chebyshev ring a forward synapse can target — `profiles.reach()`)."""
+    from . import profiles
+    return profiles.from_config(cfg).reach()
+
+
+def neighbour_columns(cfg: GridConfig, col: int,
+                      max_ring: Optional[int] = None) -> np.ndarray:
     """Unique columns within `max_ring` Chebyshev rings of `col` (periodic).
 
-    Note that on small grids periodic wrap can alias several offsets onto the
-    same column (the paper's single-column case projects everything to
-    itself); the returned array is deduplicated.
+    `max_ring=None` derives the depth from the connectivity profile the
+    config selects (`profile_reach`) — the default for every caller that
+    provisions halos.  Note that on small grids periodic wrap can alias
+    several offsets onto the same column (the paper's single-column case
+    projects everything to itself); the returned array is deduplicated.
     """
+    if max_ring is None:
+        max_ring = profile_reach(cfg)
     cx, cy = column_coords(cfg, np.asarray(col))
     cols = []
     for r in range(max_ring + 1):
@@ -114,12 +126,20 @@ def max_local_size(cfg: GridConfig, n_shards: int, placement: str) -> int:
 
 
 def shard_halo_columns(cfg: GridConfig, shard: int, n_shards: int,
-                       placement: str, max_ring: int = 3) -> np.ndarray:
+                       placement: str,
+                       max_ring: Optional[int] = None) -> np.ndarray:
     """All columns whose neurons may project onto this shard's neurons.
 
-    == union of <=3rd-ring neighbourhoods of the columns this shard owns
-    neurons in.  (Inhibitory sources are intra-column, already included.)
+    == union of `reach`-ring neighbourhoods of the columns this shard owns
+    neurons in, where reach comes from the connectivity profile when
+    `max_ring` is None (profile-derived halo depth, DESIGN.md
+    §Connectivity profiles).  Excitatory kernels are symmetric (ring r of
+    c contains c' iff ring r of c' contains c), so the same union bounds
+    incoming sources; inhibitory sources are intra-column, already
+    included.
     """
+    if max_ring is None:
+        max_ring = profile_reach(cfg)
     gids = owned_gids(cfg, shard, n_shards, placement)
     my_cols = np.unique(gid_column(cfg, gids))
     halos = [neighbour_columns(cfg, int(c), max_ring) for c in my_cols]

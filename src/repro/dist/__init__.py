@@ -11,6 +11,24 @@ partition specs through this package:
   mesh — mesh constructors (production 16x16 / 2x16x16, flat SNN `cells`).
   compat — `shard_map` across the jax versions we support (the keyword
       for replication checking moved between releases).
+
+Public API (all re-exported here):
+
+  use_mesh(mesh)               context manager binding `mesh` for `shard`
+  shard(x, *axes)              logical per-dim layout constraint on `x`;
+                               identity outside a bound mesh
+  axis_size(logical)           bound-mesh size of a logical axis (1 if unbound)
+  infer_param_spec(path, shape, mesh)   parameter PartitionSpec by path+shape
+  infer_cache_spec(path, shape, mesh)   KV/recurrent-state placement
+  infer_batch_spec(name, shape, mesh)   input-batch placement
+  tree_shardings(tree, mesh, infer_fn)  map an infer_* over a whole tree
+  shard_put / replicated_put / global_put   host tree -> device placement,
+                               process-spanning-mesh aware
+  make_snn_mesh(H)             flat `cells` mesh over the GLOBAL device list
+  make_production_mesh()       16x16 (or 2x16x16) LM mesh
+  spans_processes(mesh)        does `mesh` cross a process boundary?
+  shard_map(f, mesh, in_specs, out_specs)   version-stable jax.shard_map
+  process_allgather(tree)      host-local numpy copy of global arrays
 """
 from . import compat, mesh, sharding
 from .compat import process_allgather, shard_map

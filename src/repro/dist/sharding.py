@@ -62,7 +62,13 @@ LOGICAL_AXES = {
 
 @contextlib.contextmanager
 def use_mesh(mesh: Mesh):
-    """Bind `mesh` for `shard`/`axis_size` in this context."""
+    """Bind `mesh` for `shard`/`axis_size` in this context.
+
+    Bindings nest (a ContextVar, restored on exit) and are task-local
+    under async execution.  Model code never takes a mesh argument: it
+    names logical axes and the caller decides the physical layout by
+    choosing what to bind here — bind nothing and every constraint is an
+    identity."""
     token = _ACTIVE_MESH.set(mesh)
     try:
         yield mesh
@@ -71,6 +77,7 @@ def use_mesh(mesh: Mesh):
 
 
 def get_mesh() -> Optional[Mesh]:
+    """The mesh bound by the innermost `use_mesh`, or None outside one."""
     return _ACTIVE_MESH.get()
 
 

@@ -1,8 +1,13 @@
 """Public kernel entry points with backend dispatch + shape plumbing.
 
-`use_pallas=None` -> auto: Pallas on TPU, jnp oracle elsewhere.  The
-interpret flag runs the Pallas kernel body in Python on CPU (used by the
-kernel test suite to validate against ref.py).
+`use_pallas=None` -> auto: Pallas on TPU, jnp oracle elsewhere.  An
+explicit `use_pallas=True` off-TPU also falls back to the oracle (Pallas
+only supports interpret mode on CPU, and the interpret path is a test
+harness, ~100x slower) — so `EngineConfig(use_pallas=True)` is portable
+and rasters stay bit-identical across backend dispatch on CPU
+(tests/test_profiles.py).  The interpret flag runs the Pallas kernel body
+in Python on CPU (used by the kernel test suite to validate against
+ref.py).
 """
 from __future__ import annotations
 
@@ -24,7 +29,10 @@ def _on_tpu() -> bool:
 
 
 def _resolve(use_pallas: Optional[bool]) -> bool:
-    return _on_tpu() if use_pallas is None else use_pallas
+    # requested-or-auto, gated on the backend actually supporting compiled
+    # Pallas: forcing Pallas on CPU raises "Only interpret mode is
+    # supported on CPU backend" deep inside jit, so fall back here instead.
+    return _on_tpu() if use_pallas is None else (use_pallas and _on_tpu())
 
 
 def _pad_to_2d(x, rows_mult: int = 8):

@@ -2,7 +2,7 @@
 
   python -m repro.launch.snn --grid 4x4 --steps 500 [--shards 4]
       [--exchange halo|allgather] [--placement block|scatter]
-      [--ckpt-dir DIR]
+      [--profile ring3|gaussian:sigma=1.5|...] [--ckpt-dir DIR]
 
 With --shards > 1 this process must be started with
 XLA_FLAGS=--xla_force_host_platform_device_count=<H> (or run on a real
@@ -28,7 +28,7 @@ import jax
 import numpy as np
 
 from repro.core import (EngineConfig, GridConfig, build, checkpoint,
-                        observables, run)
+                        observables, profiles, run)
 from repro.core import distributed as D
 
 
@@ -45,6 +45,11 @@ def main():
                     choices=["dense", "event"])
     ap.add_argument("--placement", default="block",
                     choices=["block", "scatter"])
+    ap.add_argument("--profile", default="ring3",
+                    help="lateral-connectivity profile spec "
+                         "(repro.core.profiles): ring3 | ringN | "
+                         "ring:max_ring=N | gaussian:sigma=S | "
+                         "exponential:lambda=L")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     args = ap.parse_args()
@@ -52,15 +57,18 @@ def main():
     gx, gy = (int(v) for v in args.grid.split("x"))
     cfg = GridConfig(grid_x=gx, grid_y=gy,
                      neurons_per_column=args.neurons_per_column,
-                     synapses_per_neuron=args.synapses)
+                     synapses_per_neuron=args.synapses,
+                     connectivity=args.profile)
     eng = EngineConfig(n_shards=args.shards, exchange=args.exchange,
                        placement=args.placement, delivery=args.delivery)
+    prof = profiles.from_config(cfg)       # fail fast on a bad spec
     if cluster_runtime.is_primary():
         procs = (f", {jax.process_count()} processes"
                  if cluster_runtime.is_distributed() else "")
         print(f"[snn] {cfg.n_neurons} neurons / {cfg.n_synapses} synapses "
               f"on {args.shards} shards ({args.exchange}, "
-              f"{args.placement}{procs})")
+              f"{args.placement}, {prof.spec()} reach={prof.reach()}"
+              f"{procs})")
 
     if args.delivery == "event":
         assert args.shards == 1, "event backend: single-process CLI path"

@@ -41,3 +41,24 @@ def test_halo_exchange_across_processes():
     row = cli.run_point(args, nprocs=2, timeout=600)
     ref = cli.reference_signature(args)
     assert row["raster_sig"] == ref
+
+
+def test_nondefault_profile_across_processes():
+    """The Table 1 invariant must hold across the process axis at a
+    wider-than-paper connectivity reach (gaussian sigma=1.5 -> reach 5).
+    The 16x1 grid out-spans the kernel at 4 block shards (halo spans 14
+    of 16 columns vs ring3's 10), so the halo AER route crossing the
+    process boundary carries a genuinely different static schedule than
+    the ring3 tests above — not the full-grid wrap a 2x2 grid would
+    degenerate to."""
+    require_cluster()
+    args = cli.workload_namespace(grid="16x1", neurons_per_column=20,
+                                  synapses=12, seed=11, steps=50,
+                                  shards=4, exchange="halo",
+                                  profile="gaussian:sigma=1.5")
+    row = cli.run_point(args, nprocs=2, timeout=600)
+    assert row["profile"] == "gaussian:sigma=1.5"
+    ref = cli.reference_signature(args)
+    assert row["raster_sig"] == ref, \
+        "cross-process raster differs from the single-process engine " \
+        "at gaussian reach 5"

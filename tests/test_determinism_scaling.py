@@ -2,9 +2,12 @@
 
 Both exchange modes ('halo' sparse AER delivery and 'allgather' dense
 masks) must produce bit-identical raster signatures at every shard count
-H in {1, 2, 4}.  One subprocess with 4 forced host devices runs all six
-(H, exchange) points; the benchmark asserts the same invariant at larger
-scale outside pytest (benchmarks/scaling.py)."""
+H in {1, 2, 4} — and for every lateral-connectivity profile, whose reach
+sets the halo depth the exchange must provision (ring1 narrows it,
+gaussian widens it past the paper's 3 rings).  One subprocess with 4
+forced host devices runs all six (H, exchange) points of one profile;
+the benchmark asserts the same invariant at larger scale outside pytest
+(benchmarks/scaling.py)."""
 import pytest
 
 from _mp_helpers import run_with_devices
@@ -14,27 +17,52 @@ import numpy as np
 from repro.core import EngineConfig, GridConfig, build, observables
 from repro.core import distributed as D
 
-cfg = GridConfig(grid_x=2, grid_y=2, neurons_per_column=80,
-                 synapses_per_neuron=30, seed=11)
-sigs = {}
+cfg = GridConfig(grid_x={gx}, grid_y={gy}, neurons_per_column={npc},
+                 synapses_per_neuron={syn}, seed=11,
+                 connectivity={profile!r})
+sigs = {{}}
+n_offsets = {{}}
 for H in (1, 2, 4):
     for exchange in ("halo", "allgather"):
         eng = EngineConfig(n_shards=H, exchange=exchange)
         spec, plan, state = build(cfg, eng)
+        if exchange == "halo":
+            n_offsets[H] = len(D.halo_offsets(spec, plan))
         mesh = D.make_mesh(H)
         state_d = D.shard_put(mesh, state)
         runner = D.make_sharded_run(spec, plan, mesh)
-        _, raster, _ = runner(state_d, 0, 80)
+        _, raster, _ = runner(state_d, 0, {steps})
         sigs[(H, exchange)] = observables.raster_signature(
             np.asarray(raster), np.asarray(plan.gid))
 
 vals = set(sigs.values())
-assert len(vals) == 1, f'raster signatures diverge: {sigs}'
-print('DETERMINISM OK', sorted(sigs)[0], len(sigs))
+assert len(vals) == 1, f'raster signatures diverge: {{sigs}}'
+print('DETERMINISM OK', sorted(sigs)[0], len(sigs), 'OFFSETS',
+      n_offsets[4])
 """
 
 
 @pytest.mark.slow
 def test_rasters_identical_across_H_and_exchange():
-    out = run_with_devices(_CODE, 4, timeout=900)
+    out = run_with_devices(
+        _CODE.format(gx=2, gy=2, npc=80, syn=30, steps=80,
+                     profile="ring3"), 4, timeout=900)
     assert "DETERMINISM OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("profile,offsets_h4",
+                         [("ring1", 3), ("gaussian:sigma=1.5", 4)])
+def test_rasters_identical_across_H_and_exchange_per_profile(profile,
+                                                             offsets_h4):
+    """The same six (H, exchange) points at a narrower (reach 1) and a
+    wider-than-paper (reach 5) halo.  The 16x1 grid out-spans every
+    kernel at H=4 block shards (halo spans 6 / 10 / 14 of 16 columns for
+    reach 1 / 3 / 5), so the halo schedules genuinely differ per profile
+    — pinned via the H=4 offset count — instead of all wrapping to the
+    full grid as they would on 2x2."""
+    out = run_with_devices(
+        _CODE.format(gx=16, gy=1, npc=24, syn=12, steps=60,
+                     profile=profile), 4, timeout=900)
+    assert "DETERMINISM OK" in out
+    assert f"OFFSETS {offsets_h4}" in out

@@ -1,0 +1,215 @@
+"""Connectivity-profile subsystem: spec parsing, bit-identity of the
+default with the paper kernel, reach-derived halo sufficiency, and
+backend-dispatch (use_pallas fallback) raster identity at every profile.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, GridConfig, build, checkpoint,
+                        connectivity, engine, observables, profiles,
+                        topology)
+
+PROFILE_SPECS = ("ring3", "ring1", "gaussian:sigma=1.0",
+                 "exponential:lambda=0.7")
+
+
+class TestParsing:
+    def test_default_is_paper_kernel(self):
+        p = profiles.parse("ring3")
+        assert isinstance(p, profiles.RingProfile)
+        assert p.fractions == profiles.PAPER_RING_FRACTIONS
+        assert p.reach() == 3
+
+    @pytest.mark.parametrize("alias", ["paper", "default", "RING3"])
+    def test_aliases(self, alias):
+        assert profiles.parse(alias) == profiles.parse("ring3")
+
+    def test_explicit_ring3_is_bit_identical_to_default(self):
+        assert profiles.parse("ring:max_ring=3") == profiles.parse("ring3")
+
+    @pytest.mark.parametrize("spec,reach", [
+        ("ring1", 1), ("ring2", 2), ("ring5", 5), ("ring:max_ring=4", 4),
+        ("gaussian:sigma=1.0", 3), ("gaussian:sigma=1.5", 5),
+        ("gaussian:sigma=1.5,cutoff=2", 3),
+        ("exponential:lambda=1.0", 5), ("exp:lambda=0.5,cutoff=4", 2),
+    ])
+    def test_reach(self, spec, reach):
+        assert profiles.parse(spec).reach() == reach
+
+    @pytest.mark.parametrize("spec", PROFILE_SPECS + (
+        "ring:max_ring=5", "gaussian:sigma=2,cutoff=2"))
+    def test_spec_round_trips(self, spec):
+        p = profiles.parse(spec)
+        assert profiles.parse(p.spec()) == p
+
+    @pytest.mark.parametrize("bad", [
+        "nope", "gaussian:sigma=0", "gaussian:sigma=1,zap=2",
+        "ring:max_ring=-1", "ring3:sigma=1", "exponential:lambda=-2",
+        "gaussian:sigma", "ring:"])
+    def test_rejects_malformed(self, bad):
+        with pytest.raises(ValueError):
+            profiles.parse(bad)
+
+    def test_ring_masses_decay(self):
+        for spec in ("gaussian:sigma=1.0", "exponential:lambda=0.7"):
+            m = np.asarray(profiles.parse(spec).ring_masses())
+            per_col = m / np.array([profiles.ring_size(r)
+                                    for r in range(m.shape[0])])
+            assert (np.diff(per_col) < 0).all(), spec
+
+    def test_custom_ring_fractions_flow_through(self):
+        cfg = GridConfig(ring_fractions=(0.5, 0.3, 0.15, 0.05))
+        assert profiles.from_config(cfg).ring_masses() == \
+            (0.5, 0.3, 0.15, 0.05)
+
+
+class TestKernelGeneration:
+    def test_offset_tables_match_legacy(self):
+        off, start = profiles.offset_tables(3)
+        assert start.tolist() == [0, 1, 9, 25, 49]
+        legacy = np.concatenate(
+            [np.asarray(topology.ring_offsets(r), dtype=np.int64)
+             for r in range(4)])
+        assert np.array_equal(off, legacy)
+
+    def test_explicit_ring3_config_generates_identical_synapses(self):
+        a = GridConfig(grid_x=2, grid_y=2, neurons_per_column=30,
+                       synapses_per_neuron=10, seed=5)
+        b = GridConfig(grid_x=2, grid_y=2, neurons_per_column=30,
+                       synapses_per_neuron=10, seed=5,
+                       connectivity="ring:max_ring=3")
+        g = np.arange(a.n_neurons)
+        fa, fb = (connectivity.forward_synapses(c, g) for c in (a, b))
+        for name in ("tgt_gid", "delay", "weight", "plastic"):
+            assert np.array_equal(getattr(fa, name), getattr(fb, name)), name
+
+    @pytest.mark.parametrize("spec", PROFILE_SPECS)
+    def test_targets_within_reach(self, spec):
+        """Every excitatory target column is within `reach` Chebyshev rings
+        of the source (on a grid wide enough not to wrap-alias)."""
+        p = profiles.parse(spec)
+        side = 2 * p.reach() + 3
+        cfg = GridConfig(grid_x=side, grid_y=side, neurons_per_column=10,
+                         synapses_per_neuron=8, seed=9, connectivity=spec)
+        g = np.arange(cfg.n_neurons)
+        fwd = connectivity.forward_synapses(cfg, g)
+        exc = topology.is_excitatory(cfg, g)
+        scol = topology.gid_column(cfg, g)[:, None]
+        tcol = topology.gid_column(cfg, fwd.tgt_gid)
+        sx, sy = topology.column_coords(cfg, scol)
+        tx, ty = topology.column_coords(cfg, tcol)
+        # periodic Chebyshev distance
+        dx = np.minimum(np.abs(sx - tx), side - np.abs(sx - tx))
+        dy = np.minimum(np.abs(sy - ty), side - np.abs(sy - ty))
+        dist = np.maximum(dx, dy)[exc]
+        assert dist.max() <= p.reach(), spec
+        if p.reach() > 1:
+            assert dist.max() > 1, f"{spec}: kernel never left ring 1?"
+
+    @pytest.mark.parametrize("spec", PROFILE_SPECS)
+    @pytest.mark.parametrize("placement", ["block", "scatter"])
+    def test_halo_superset_of_actual_sources(self, spec, placement):
+        """reach()-derived halo columns must cover every actual presynaptic
+        source, and build_shard must capture exactly the incoming synapses
+        a brute-force scan over ALL neurons finds (a truncated halo would
+        silently drop synapses)."""
+        cfg = GridConfig(grid_x=5, grid_y=4, neurons_per_column=10,
+                         synapses_per_neuron=6, seed=3, connectivity=spec)
+        eng = EngineConfig(n_shards=3, placement=placement)
+        fwd = connectivity.forward_synapses(cfg, np.arange(cfg.n_neurons))
+        src_all = np.repeat(np.arange(cfg.n_neurons),
+                            cfg.synapses_per_neuron)
+        tgt_all = fwd.tgt_gid.ravel()
+        owner = topology.owner_of(cfg, tgt_all, eng.n_shards, eng.placement)
+        for h in range(eng.n_shards):
+            halo = topology.shard_halo_columns(cfg, h, eng.n_shards,
+                                               eng.placement)
+            incoming_src_cols = np.unique(topology.gid_column(
+                cfg, src_all[owner == h]))
+            assert np.isin(incoming_src_cols, halo).all(), (spec, h)
+            t = connectivity.build_shard(cfg, eng, h)
+            assert t.n_valid == int((owner == h).sum()), (spec, h)
+
+
+class TestEngineAcrossProfiles:
+    @pytest.mark.parametrize("spec", ["ring1", "gaussian:sigma=1.0"])
+    def test_vmap_shards_invariant(self, spec):
+        """H=1 vs H=2 logical shards spike identically for non-default
+        profiles (single-device vmap path; the shard_map/cluster paths are
+        covered by test_determinism_scaling/test_cluster_smoke)."""
+        cfg = GridConfig(grid_x=2, grid_y=2, neurons_per_column=40,
+                         synapses_per_neuron=12, seed=21, connectivity=spec)
+        sigs = set()
+        for H in (1, 2):
+            spec_, plan, state = build(cfg, EngineConfig(n_shards=H))
+            _, raster, _ = engine.run(spec_, plan, state, 0, 40)
+            sigs.add(observables.raster_signature(np.asarray(raster),
+                                                  np.asarray(plan.gid)))
+        assert len(sigs) == 1
+
+    def test_profiles_change_the_physics(self):
+        """Different kernels must produce different rasters — otherwise the
+        profile knob is not actually wired into the build."""
+        sigs = {}
+        for spec in PROFILE_SPECS:
+            cfg = GridConfig(grid_x=3, grid_y=3, neurons_per_column=30,
+                             synapses_per_neuron=10, seed=21,
+                             connectivity=spec)
+            s, plan, state = build(cfg, EngineConfig())
+            _, raster, _ = engine.run(s, plan, state, 0, 30)
+            sigs[spec] = observables.raster_signature(
+                np.asarray(raster), np.asarray(plan.gid))
+        assert len(set(sigs.values())) == len(sigs), sigs
+
+    @pytest.mark.parametrize("spec", PROFILE_SPECS)
+    def test_use_pallas_fallback_bit_identical(self, spec):
+        """EngineConfig(use_pallas=True) on CPU must fall back to the
+        reference kernels (kernels.ops._resolve) and leave the raster
+        bit-identical — at every profile, not just ring3."""
+        cfg = GridConfig(grid_x=2, grid_y=2, neurons_per_column=30,
+                         synapses_per_neuron=10, seed=13, connectivity=spec)
+        rasters = []
+        for up in (False, True):
+            s, plan, state = build(cfg, EngineConfig(use_pallas=up))
+            _, raster, _ = engine.run(s, plan, state, 0, 30)
+            rasters.append(np.asarray(raster))
+        assert np.array_equal(*rasters), spec
+
+
+class TestCheckpointProfileGuard:
+    @staticmethod
+    def _save(tmp_path, **cfg_kw):
+        cfg = GridConfig(grid_x=1, grid_y=1, neurons_per_column=30,
+                         synapses_per_neuron=8, seed=2, **cfg_kw)
+        s, plan, state = build(cfg, EngineConfig())
+        path = str(tmp_path / "ckpt_1.npz")
+        checkpoint.save(path, s, plan,
+                        __import__("jax").tree.map(np.asarray, state), 1)
+        return path
+
+    @staticmethod
+    def _load(path, **cfg_kw):
+        cfg = GridConfig(grid_x=1, grid_y=1, neurons_per_column=30,
+                         synapses_per_neuron=8, seed=2, **cfg_kw)
+        s, plan, _ = build(cfg, EngineConfig())
+        return checkpoint.load(path, s, plan)
+
+    def test_profile_mismatch_rejected(self, tmp_path):
+        path = self._save(tmp_path, connectivity="gaussian:sigma=1.0")
+        with pytest.raises(AssertionError, match="connectivity"):
+            self._load(path)
+
+    def test_equivalent_spec_strings_load(self, tmp_path):
+        """The guard gates the resolved kernel, not the spec string:
+        ring:max_ring=3 IS ring3."""
+        path = self._save(tmp_path, connectivity="ring:max_ring=3")
+        _, t = self._load(path, connectivity="ring3")
+        assert t == 1
+
+    def test_same_spec_different_fractions_rejected(self, tmp_path):
+        """...and conversely, the same 'ring3' string over different
+        ring_fractions is a different kernel and must not load."""
+        path = self._save(tmp_path,
+                          ring_fractions=(0.5, 0.3, 0.15, 0.05))
+        with pytest.raises(AssertionError, match="connectivity"):
+            self._load(path)
