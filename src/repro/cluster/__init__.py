@@ -21,7 +21,10 @@ crosses the process boundary:
 The headline invariant is the paper's Table 1 check extended across the
 process axis: rasters are bit-identical for 1 process x H shards vs
 P processes x H/P shards (tests/test_cluster_smoke.py) — at every
-lateral-connectivity profile (`--profile`, core.profiles).
+lateral-connectivity profile (`--profile`, core.profiles) and for BOTH
+delivery backends (`--delivery dense|event`, core.event_engine: the
+paper's event-driven formulation runs under the same process-spanning
+meshes and exchange wires).
 
 Public API:
 

@@ -45,12 +45,12 @@ def run_point(args, nprocs: int, timeout: float = 900.0) -> dict:
 def reference_signature(args) -> str:
     """Raster signature from the single-process vmap engine for the same
     (seed, grid) config — the ground truth `run --verify` compares with.
-    Runs on this process's single default device (logical shards only)."""
+    Runs on this process's single default device (logical shards only);
+    dispatches on the workload's delivery backend like the workers do."""
     import numpy as np
 
-    from ..core import EngineConfig, GridConfig, build, checkpoint
-    from ..core import engine as eng_mod
-    from ..core import observables
+    from ..core import (EngineConfig, GridConfig, build_delivery,
+                        checkpoint, observables, run_delivery)
 
     gx, gy = (int(v) for v in args.grid.split("x"))
     cfg = GridConfig(grid_x=gx, grid_y=gy,
@@ -58,12 +58,13 @@ def reference_signature(args) -> str:
                      synapses_per_neuron=args.synapses, seed=args.seed,
                      connectivity=getattr(args, "profile", "ring3"))
     eng = EngineConfig(n_shards=args.shards, exchange=args.exchange,
-                       placement=args.placement)
-    spec, plan, state = build(cfg, eng)
+                       placement=args.placement,
+                       delivery=getattr(args, "delivery", "dense"))
+    spec, plan, eplan, state, cap_ev = build_delivery(cfg, eng)
     t0 = 0
     if getattr(args, "ckpt", None):
-        state, t0 = checkpoint.load(args.ckpt, spec, plan)
-    _, raster, _ = eng_mod.run(spec, plan, state, t0, args.steps)
+        state, t0 = checkpoint.load(args.ckpt, spec, plan, cap_ev=cap_ev)
+    _, raster, _ = run_delivery(spec, plan, eplan, state, t0, args.steps)
     return observables.raster_signature(np.asarray(raster),
                                         np.asarray(plan.gid)).hex()
 
@@ -93,13 +94,15 @@ def cmd_run(args) -> int:
 
 
 def sweep_report(quick: bool = False, nprocs_list=None, out: str = None,
-                 timeout: float = 900.0, profile: str = "ring3") -> dict:
+                 timeout: float = 900.0, profile: str = "ring3",
+                 delivery: str = "dense") -> dict:
     """Run the strong-scaling sweep; returns (and optionally writes) the
     BENCH report.  Total shards H = max process count, so the 1-process
     point runs H local shards and the P-process point H/P each — the
     ISSUE's headline invariant.  `profile` selects the lateral-connectivity
-    kernel (repro.core.profiles); the invariant must — and does — hold at
-    every reach."""
+    kernel (repro.core.profiles) and `delivery` the synaptic backend; the
+    invariant must — and does — hold at every reach and for both
+    backends."""
     from ..bench import report as bench_report
 
     nprocs_list = sorted(nprocs_list or [1, 2])
@@ -110,7 +113,8 @@ def sweep_report(quick: bool = False, nprocs_list=None, out: str = None,
         steps=60 if quick else 150,
         phase_steps=15 if quick else 40,
         shards=max(nprocs_list),
-        profile=profile)
+        profile=profile,
+        delivery=delivery)
     rows = []
     for p in nprocs_list:
         row = run_point(args, p, timeout=timeout)
@@ -126,7 +130,8 @@ def sweep_report(quick: bool = False, nprocs_list=None, out: str = None,
                   grid=args.grid, neurons_per_column=args.neurons_per_column,
                   synapses=args.synapses, steps=args.steps,
                   phase_steps=args.phase_steps, exchange=args.exchange,
-                  placement=args.placement, profile=args.profile)
+                  placement=args.placement, profile=args.profile,
+                  delivery=args.delivery)
     rep = crep.scaling_report(rows, config)
     if out:
         path = bench_report.save(rep, out)
@@ -159,13 +164,17 @@ def main(argv=None) -> int:
     sp.add_argument("--profile", default="ring3",
                     help="lateral-connectivity profile spec "
                          "(repro.core.profiles)")
+    sp.add_argument("--delivery", default="dense",
+                    choices=["dense", "event"],
+                    help="synaptic delivery backend for every sweep point")
 
     args = ap.parse_args(argv)
     if args.cmd == "run":
         return cmd_run(args)
     nprocs_list = [int(v) for v in args.nprocs_list.split(",") if v]
     sweep_report(quick=args.quick, nprocs_list=nprocs_list, out=args.out,
-                 timeout=args.timeout, profile=args.profile)
+                 timeout=args.timeout, profile=args.profile,
+                 delivery=args.delivery)
     return 0
 
 

@@ -57,6 +57,7 @@ def summarize_point(results: List[dict]) -> dict:
                steps=results[0]["steps"], t0=results[0]["t0"],
                exchange=results[0]["exchange"],
                placement=results[0]["placement"],
+               delivery=results[0].get("delivery", "dense"),
                profile=results[0].get("profile", "ring3"),
                wall_s=max(r["wall_s"] for r in results),
                spikes=results[0]["spikes"],
@@ -65,6 +66,8 @@ def summarize_point(results: List[dict]) -> dict:
                per_proc=[{k: r[k] for k in
                           ("proc", "wall_s", *PHASE_KEYS) if k in r}
                          for r in results])
+    if "saturated" in results[0]:
+        row["saturated"] = max(r.get("saturated", 0) for r in results)
     for k in PHASE_KEYS:
         if all(k in r for r in results):
             row[k] = round(max(r[k] for r in results), 4)

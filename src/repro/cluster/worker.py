@@ -38,6 +38,10 @@ def add_workload_args(ap: argparse.ArgumentParser) -> None:
                     choices=["allgather", "halo"])
     ap.add_argument("--placement", default="block",
                     choices=["block", "scatter"])
+    ap.add_argument("--delivery", default="dense",
+                    choices=["dense", "event"],
+                    help="synaptic delivery backend: dense O(E) masked or "
+                         "event-driven O(spikes x fan)")
     ap.add_argument("--profile", default="ring3",
                     help="lateral-connectivity profile spec "
                          "(repro.core.profiles)")
@@ -60,6 +64,7 @@ def workload_argv(args) -> list:
             "--shards", str(args.shards),
             "--exchange", args.exchange,
             "--placement", args.placement,
+            "--delivery", getattr(args, "delivery", "dense"),
             "--profile", args.profile,
             "--phase-steps", str(args.phase_steps)]
     if getattr(args, "ckpt", None):
@@ -79,8 +84,8 @@ def main(argv=None) -> int:
     import jax
     import numpy as np
 
-    from ..core import (EngineConfig, GridConfig, build, checkpoint,
-                        observables)
+    from ..core import (EngineConfig, GridConfig, build_delivery,
+                        checkpoint, observables)
     from ..core import distributed as D
     from ..dist import mesh as dist_mesh
     from ..dist import sharding as dist_sharding
@@ -97,20 +102,21 @@ def main(argv=None) -> int:
                      synapses_per_neuron=args.synapses, seed=args.seed,
                      connectivity=args.profile)
     eng = EngineConfig(n_shards=H, exchange=args.exchange,
-                       placement=args.placement)
-    spec, plan, state = build(cfg, eng)
+                       placement=args.placement, delivery=args.delivery)
+    event = args.delivery == "event"
+    spec, plan, eplan, state, cap_ev = build_delivery(cfg, eng)
     t0 = 0
     if args.ckpt:
-        state, t0 = checkpoint.load(args.ckpt, spec, plan)
+        state, t0 = checkpoint.load(args.ckpt, spec, plan, cap_ev=cap_ev)
 
     mesh = dist_mesh.make_snn_mesh(H)
     state_d = dist_sharding.shard_put(mesh, state, "cells")
-    runner = D.make_sharded_run(spec, plan, mesh)
+    runner = D.make_sharded_run(spec, plan, mesh, eplan=eplan)
 
     # fused run: warmup (compile), then timed from the same initial state
     jax.block_until_ready(runner(state_d, t0, args.steps)[1])
     w0 = time.perf_counter()
-    _, raster, _ = runner(state_d, t0, args.steps)
+    state_f, raster, _ = runner(state_d, t0, args.steps)
     jax.block_until_ready(raster)
     wall_s = time.perf_counter() - w0
 
@@ -120,34 +126,23 @@ def main(argv=None) -> int:
         proc=runtime.process_index(), nprocs=runtime.process_count(),
         shards=H, t0=t0, steps=args.steps,
         exchange=args.exchange, placement=args.placement,
-        profile=args.profile,
+        delivery=args.delivery, profile=args.profile,
         local_devices=jax.local_device_count(),
         wall_s=round(wall_s, 4),
         spikes=int(raster_np.sum()),
         rate_hz=round(observables.mean_rate_hz(raster_np, cfg.n_neurons), 3),
         raster_sig=observables.raster_signature(raster_np, gid_np).hex())
+    if event:
+        result["saturated"] = int(np.asarray(
+            runtime.gather(state_f.sat)).sum())
 
     if args.phase_steps > 0:
-        phase_a, exchange, phase_b = D.make_phase_fns(spec, plan, mesh)
-        s = state_d                   # runner never mutates its input state
-        # warmup all three phase programs
-        s_w, spk_w, _ = phase_a(s, t0)
-        src_w = exchange(spk_w)
-        jax.block_until_ready(phase_b(s_w, src_w, t0))
-        times = dict(phase_a_s=0.0, exchange_s=0.0, phase_b_s=0.0)
-        for t in range(t0, t0 + args.phase_steps):
-            c0 = time.perf_counter()
-            s2, spiked, _ = phase_a(s, t)
-            jax.block_until_ready(spiked)
-            times["phase_a_s"] += time.perf_counter() - c0
-            c0 = time.perf_counter()
-            spiked_src = exchange(spiked)
-            jax.block_until_ready(spiked_src)
-            times["exchange_s"] += time.perf_counter() - c0
-            c0 = time.perf_counter()
-            s = phase_b(s2, spiked_src, t)
-            jax.block_until_ready(s.arr_ring)
-            times["phase_b_s"] += time.perf_counter() - c0
+        phase_fns = D.make_phase_fns(spec, plan, mesh, eplan=eplan)
+        # runner never mutates its input state, so state_d re-seeds the
+        # split loop; warmup + per-phase blocking live in time_phases
+        # (shared with the event_vs_dense bench suite)
+        _, times, _ = D.time_phases(phase_fns, state_d, t0,
+                                    args.phase_steps)
         result["phase_steps"] = args.phase_steps
         result.update({k: round(v, 4) for k, v in times.items()})
 

@@ -8,10 +8,39 @@ from .engine import (ShardPlan, ShardState, SimSpec, build, init_state,
 from . import (aer, checkpoint, connectivity, distributed, observables,
                profiles, stimulus, topology)
 
+
+def build_delivery(cfg, eng, izh=None, stdp=None):
+    """Backend-generic build, dispatching on `eng.delivery`.
+
+    Returns (spec, plan, eplan, state, cap_ev): for the dense backend
+    eplan/cap_ev are None and state is a ShardState; for the event
+    backend they are the EventPlan and ring capacity, state an
+    EventState.  `cap_ev` is exactly what `checkpoint.load` needs, so
+    callers stay delivery-agnostic end to end (launch/snn, cluster
+    worker/cli all build through here)."""
+    from .params import DEFAULT_IZH, DEFAULT_STDP
+    izh, stdp = izh or DEFAULT_IZH, stdp or DEFAULT_STDP
+    if eng.delivery == "event":
+        from . import event_engine
+        spec, plan, eplan, state = event_engine.build(cfg, eng, izh, stdp)
+        return spec, plan, eplan, state, state.ev_ring.shape[-1]
+    spec, plan, state = build(cfg, eng, izh, stdp)
+    return spec, plan, None, state, None
+
+
+def run_delivery(spec, plan, eplan, state, t0, n_steps):
+    """Backend-generic single-device driver: (state, raster, timings) via
+    `engine.run` or `event_engine.run` depending on `eplan`."""
+    if eplan is not None:
+        from . import event_engine
+        return event_engine.run(spec, plan, eplan, state, t0, n_steps)
+    return run(spec, plan, state, t0, n_steps)
+
+
 __all__ = [
     "EngineConfig", "GridConfig", "IzhikevichParams", "StdpParams",
     "DEFAULT_IZH", "DEFAULT_STDP", "ShardPlan", "ShardState", "SimSpec",
-    "build", "init_state", "make_step_fn", "run", "aer", "checkpoint",
-    "connectivity", "distributed", "observables", "profiles", "stimulus",
-    "topology",
+    "build", "build_delivery", "init_state", "make_step_fn", "run",
+    "run_delivery", "aer", "checkpoint", "connectivity", "distributed",
+    "observables", "profiles", "stimulus", "topology",
 ]

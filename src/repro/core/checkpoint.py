@@ -9,6 +9,20 @@ tests/test_checkpoint.py) — node-count changes on restart are free.
 
 Writes are crash-safe: tmp file + atomic rename; `latest()` finds the newest
 complete checkpoint, so a kill at any point leaves a loadable state.
+
+Both delivery backends are covered by ONE on-disk format: the event
+backend's ring of per-slot synapse-id lists maps onto the dense backend's
+[D, E] per-synapse ring layout (a synapse can be pending at most once per
+slot — delays < D guarantee it), except the event entries are within-slot
+RANKS rather than booleans: phase_a's fp32 scatter-add accumulates in
+list order, so `load` must rebuild each slot list in the exact order the
+live ring held (same-layout restarts stay bit-identical); a resharded
+restore merges by the saved ranks (deterministic, same-source relative
+order preserved).  The checkpoint records which backend wrote it and
+`load` guards a mode mismatch like connectivity: the two backends' states
+are intentionally NOT interchangeable (their fp32 summation orders
+differ, so silently continuing under the other backend would
+un-reproducibly fork the trajectory).
 """
 from __future__ import annotations
 
@@ -19,8 +33,9 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from . import connectivity, engine, profiles
+from . import connectivity, engine, event_engine, profiles
 from .engine import ShardPlan, ShardState, SimSpec
+from .event_engine import EventState
 
 
 def _global_keys(spec: SimSpec, plan: ShardPlan):
@@ -39,9 +54,60 @@ def _global_keys(spec: SimSpec, plan: ShardPlan):
     return (np.stack(tgt), np.stack(src), np.stack(j), np.stack(valid))
 
 
-def save(path: str, spec: SimSpec, plan: ShardPlan, state: ShardState,
-         t: int) -> str:
-    """Write a layout-free checkpoint; returns the final path."""
+def _event_ring_to_ranks(state: EventState, e_cap: int) -> np.ndarray:
+    """[H, D, cap_ev] event-id lists -> [H, D, E] per-synapse slot RANKS
+    (0 = not pending, k = k-th event of its slot list).
+
+    Rides the dense ring's per-synapse persistence layout (a synapse is
+    pending at most once per slot, delays < D) but keeps the within-slot
+    ORDER: phase_a's fp32 scatter-add accumulates in list order, so a
+    restore that re-canonicalized the lists would fork the trajectory
+    bitwise whenever >= 3 same-slot events share a target."""
+    ring = np.asarray(state.ev_ring)
+    H, D, cap = ring.shape
+    ranks = np.zeros((H, D, e_cap), dtype=np.int32)
+    pos = np.arange(1, cap + 1, dtype=np.int32)
+    for h in range(H):
+        for d in range(D):
+            ids = ring[h, d]
+            ranks[h, d, ids[ids >= 0]] = pos[ids >= 0]
+    return ranks
+
+
+def _ranks_to_event_ring(ranks: np.ndarray, cap_ev: int):
+    """Inverse of `_event_ring_to_ranks`: per-slot lists ordered by the
+    saved ranks.  Same-layout restore reproduces the live list exactly
+    (bit-identical continuation); a resharded restore merges each new
+    shard's pending events by their old ranks (stable, ascending-id
+    ties), which is deterministic and preserves every same-source
+    relative order."""
+    H, D, _ = ranks.shape
+    ring = np.full((H, D, cap_ev), -1, dtype=np.int32)
+    count = np.zeros((H, D), dtype=np.int32)
+    for h in range(H):
+        for d in range(D):
+            ids = np.nonzero(ranks[h, d])[0]
+            if ids.shape[0] > cap_ev:
+                raise ValueError(
+                    f"checkpoint slot holds {ids.shape[0]} pending events "
+                    f"> cap_ev {cap_ev}; restore with a larger cap_ev")
+            ids = ids[np.argsort(ranks[h, d, ids], kind="stable")]
+            ring[h, d, :ids.shape[0]] = ids
+            count[h, d] = ids.shape[0]
+    return ring, count
+
+
+def save(path: str, spec: SimSpec, plan: ShardPlan, state, t: int) -> str:
+    """Write a layout-free checkpoint; returns the final path.
+
+    `state` is a ShardState (delivery='dense') or an EventState
+    (delivery='event'); the mode is recorded and guarded on load."""
+    delivery, sat_total = "dense", 0
+    if isinstance(state, EventState):
+        delivery = "event"
+        sat_total = int(np.asarray(state.sat).sum())
+        ranks = _event_ring_to_ranks(state, state.base.w.shape[-1])
+        state = state.base._replace(arr_ring=ranks)
     tgt, src, j, valid = _global_keys(spec, plan)
     m = valid.reshape(-1)
 
@@ -77,7 +143,8 @@ def save(path: str, spec: SimSpec, plan: ShardPlan, state: ShardState,
                 neurons_per_column=spec.cfg.neurons_per_column,
                 synapses_per_neuron=spec.cfg.synapses_per_neuron,
                 seed=spec.cfg.seed, connectivity=spec.cfg.connectivity,
-                ring_masses=list(prof.ring_masses()), t=int(t))
+                ring_masses=list(prof.ring_masses()), t=int(t),
+                delivery=delivery, sat=sat_total)
 
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
@@ -88,9 +155,13 @@ def save(path: str, spec: SimSpec, plan: ShardPlan, state: ShardState,
     return path
 
 
-def load(path: str, spec: SimSpec, plan: ShardPlan
-         ) -> Tuple[ShardState, int]:
-    """Restore into an arbitrary (possibly different) layout."""
+def load(path: str, spec: SimSpec, plan: ShardPlan,
+         cap_ev: Optional[int] = None) -> Tuple[ShardState, int]:
+    """Restore into an arbitrary (possibly different) layout.
+
+    Returns (ShardState, t) for delivery='dense' and (EventState, t) for
+    delivery='event' (then `cap_ev` sizes the rebuilt ring — pass
+    `state.ev_ring.shape[-1]` from `event_engine.build`)."""
     z = np.load(path, allow_pickle=False)
     meta = json.loads(str(z["meta"]))
     for k, v in (("grid_x", spec.cfg.grid_x), ("grid_y", spec.cfg.grid_y),
@@ -98,6 +169,15 @@ def load(path: str, spec: SimSpec, plan: ShardPlan
                  ("synapses_per_neuron", spec.cfg.synapses_per_neuron),
                  ("seed", spec.cfg.seed)):
         assert meta[k] == v, f"checkpoint {k} mismatch: {meta[k]} != {v}"
+    # Delivery-mode guard, same shape as the connectivity guard below: the
+    # backends' states are semantically convertible but their fp32
+    # summation orders differ, so a silent cross-mode restore would fork
+    # the trajectory un-reproducibly.  Checkpoints from before this key
+    # were all written by the dense engine.
+    saved_mode = meta.get("delivery", "dense")
+    assert saved_mode == spec.eng.delivery, \
+        f"checkpoint delivery mode mismatch: saved {saved_mode!r} != " \
+        f"configured {spec.eng.delivery!r}"
     # Profile mismatch means different synapse keys — restoring would
     # silently produce garbage.  Gate on the resolved kernel (per-ring
     # masses fully determine the draws given seed/grid/M), NOT the raw
@@ -146,19 +226,34 @@ def load(path: str, spec: SimSpec, plan: ShardPlan
         a[m] = z[name][pos[m]]
         return a.reshape(H, E)
 
+    # per-slot ring, re-keyed like every synapse field: bool arrival flags
+    # for the dense backend, int32 within-slot ranks for the event one
     D = spec.cfg.n_delay_slots
-    arr = np.zeros((H * E, D), dtype=bool)
+    arr = np.zeros((H * E, D), dtype=z["arr_ring"].dtype)
     arr[m] = z["arr_ring"].T[pos[m]]
     arr = np.moveaxis(arr.reshape(H, E, D), 2, 1)  # [H, D, E]
 
     import jax.numpy as jnp
-    new = ShardState(
+    event = saved_mode == "event"
+    base = ShardState(
         v=jnp.asarray(neuron("v", state.v)),
         u=jnp.asarray(neuron("u", state.u)),
         last_post=jnp.asarray(neuron("last_post", state.last_post)),
         w=jnp.asarray(syn("w", state.w)),
         last_arr=jnp.asarray(syn("last_arr", state.last_arr)),
-        arr_ring=jnp.asarray(arr))
+        arr_ring=jnp.zeros_like(state.arr_ring) if event
+        else jnp.asarray(arr))
+    if not event:
+        return base, int(z["t"])
+    if cap_ev is None:
+        raise ValueError("loading an event-mode checkpoint needs cap_ev= "
+                         "(the ring capacity from event_engine.build)")
+    ring, count = _ranks_to_event_ring(arr, cap_ev)
+    sat = np.zeros((H,), np.int32)
+    sat[0] = int(meta.get("sat", 0))       # layout-free total, on shard 0
+    new = event_engine.EventState(
+        base=base, ev_ring=jnp.asarray(ring),
+        ev_count=jnp.asarray(count), sat=jnp.asarray(sat))
     return new, int(z["t"])
 
 

@@ -17,17 +17,30 @@ Spike exchange modes (EngineConfig.exchange):
       lane is a compute-gating hint (processing cost scales with real
       spikes), while wire bytes are static — the SPMD trade documented in
       DESIGN.md §2.
+
+Delivery modes (EngineConfig.delivery) — orthogonal to the exchange:
+
+  'dense' — O(E) masked delivery (`engine.phase_a/phase_b`).
+  'event' — O(spikes x fan) event lists (`event_engine.phase_a/phase_b`),
+      the paper's actual computational model.  The exchange wire is
+      UNCHANGED: its output `spiked_src` is exactly the event backend's
+      phase_b input, so halo/allgather schedules compose with event
+      delivery for free.  Callers pass the `EventPlan` (threaded through
+      the jitted programs as an argument alongside the ShardPlan — closure
+      constants cannot span processes) and an `EventState` whose extra
+      leaves (ev_ring, ev_count, sat) ride the same `cells` specs.
 """
 from __future__ import annotations
 
-from typing import List
+import time
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from . import aer, engine, stimulus, topology
+from . import aer, engine, event_engine, stimulus, topology
 from .engine import ShardPlan, ShardState, SimSpec
 from ..dist import compat as dist_compat
 from ..dist import mesh as dist_mesh
@@ -109,11 +122,70 @@ def _make_exchange(spec: SimSpec, plan: ShardPlan):
     return lambda p1, s1: _spiked_src_allgather(spec, gid_all, s1, p1.src_gid)
 
 
-def _specs(plan: ShardPlan):
+# ---------------------------------------------------------------------------
+# delivery dispatch: both backends share the plan/state/exchange plumbing
+# ---------------------------------------------------------------------------
+
+
+def _is_event(spec: SimSpec) -> bool:
+    return spec.eng.delivery == "event"
+
+
+def _base_plan(planT):
+    """The ShardPlan inside a delivery-dependent plan tree (event mode
+    carries (ShardPlan, EventPlan); NamedTuples are tuples, so dispatch on
+    the concrete type, not tuple-ness)."""
+    return planT if isinstance(planT, ShardPlan) else planT[0]
+
+
+def _plan_tree(spec: SimSpec, plan: ShardPlan, eplan):
+    if not _is_event(spec):
+        return plan
+    if eplan is None:
+        raise ValueError("delivery='event' needs the EventPlan: pass "
+                         "eplan= (from event_engine.build)")
+    return (plan, eplan)
+
+
+def _delivery_phases(spec: SimSpec, stim_k, caps: Optional[dict] = None):
+    """Per-shard (phase_a, phase_b) callables over the delivery-dependent
+    plan tree.  Both backends share the signature
+    (planT_1, state_1, ...) -> ... with phase_a returning
+    (state', spiked, StepTimings)."""
+    caps = caps or {}
+    if _is_event(spec):
+        c_post, c_src = caps.get("c_post"), caps.get("c_src")
+
+        def pa(planT, st, t):
+            p, ep = planT
+            return event_engine.phase_a(spec, p, ep, st, t, stim_k,
+                                        c_post=c_post)
+
+        def pb(planT, st, ss, t):
+            p, ep = planT
+            return event_engine.phase_b(spec, p, ep, st, ss, t, c_src=c_src)
+
+        return pa, pb
+
+    def pa(planT, st, t):
+        return engine.phase_a(spec, planT, st, t, stim_k)
+
+    def pb(planT, st, ss, t):
+        return engine.phase_b(spec, planT, st, ss, t)
+
+    return pa, pb
+
+
+def _specs(spec: SimSpec, planT):
     """(plan, state, per-step-timings) partition specs over `cells`."""
     pspec = P("cells")
-    plan_specs = jax.tree.map(lambda _: pspec, plan)
-    state_specs = ShardState(*([pspec] * len(ShardState._fields)))
+    plan_specs = jax.tree.map(lambda _: pspec, planT)
+    base = ShardState(*([pspec] * len(ShardState._fields)))
+    if _is_event(spec):
+        state_specs = event_engine.EventState(
+            base=base, ev_ring=pspec, ev_count=pspec, sat=pspec)
+    else:
+        state_specs = base
     tm_specs = engine.StepTimings(spikes=pspec, arrivals=pspec)
     return pspec, plan_specs, state_specs, tm_specs
 
@@ -123,7 +195,8 @@ def _drop_lead(tree):
     return jax.tree.map(lambda x: x[0], tree)
 
 
-def make_sharded_run(spec: SimSpec, plan: ShardPlan, mesh: Mesh):
+def make_sharded_run(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
+                     eplan=None, caps: Optional[dict] = None):
     """Returns run(state, t0, n_steps) -> (state, raster, timings), executing
     one shard per device of the `cells` mesh axis.
 
@@ -131,20 +204,27 @@ def make_sharded_run(spec: SimSpec, plan: ShardPlan, mesh: Mesh):
     halo discovery reads it with numpy, and it is then placed on `mesh`
     here and threaded through the jitted program as an *argument* — a
     closure constant cannot span processes, and even single-process it
-    re-materializes ~50x slower on CPU (EXPERIMENTS.md §Perf)."""
+    re-materializes ~50x slower on CPU (EXPERIMENTS.md §Perf).
+
+    With spec.eng.delivery == 'event', `eplan` (host-addressable, from
+    `event_engine.build`) rides along the same way and `state` must be an
+    EventState; `caps` optionally overrides the event compaction
+    capacities (dict with 'c_post'/'c_src' — tests force tiny ones)."""
     stim_k = stimulus.stim_key(spec.cfg)
     exchange = _make_exchange(spec, plan)
-    pspec, plan_specs, state_specs, tm_specs = _specs(plan)
-    plan_d = dist_sharding.shard_put(mesh, plan, "cells")
+    planT = _plan_tree(spec, plan, eplan)
+    pa, pb = _delivery_phases(spec, stim_k, caps)
+    pspec, plan_specs, state_specs, tm_specs = _specs(spec, planT)
+    plan_d = dist_sharding.shard_put(mesh, planT, "cells")
 
     def shard_body(plan_s, state_s, ts):
         plan_1 = _drop_lead(plan_s)
         state_1 = _drop_lead(state_s)
 
         def step(state, t):
-            state, spiked, tm = engine.phase_a(spec, plan_1, state, t, stim_k)
-            spiked_src = exchange(plan_1, spiked)
-            state = engine.phase_b(spec, plan_1, state, spiked_src, t)
+            state, spiked, tm = pa(plan_1, state, t)
+            spiked_src = exchange(_base_plan(plan_1), spiked)
+            state = pb(plan_1, state, spiked_src, t)
             return state, (spiked, tm)
 
         state_1, (raster, tm) = jax.lax.scan(step, state_1, ts)
@@ -168,7 +248,8 @@ def make_sharded_run(spec: SimSpec, plan: ShardPlan, mesh: Mesh):
     return runner
 
 
-def make_phase_fns(spec: SimSpec, plan: ShardPlan, mesh: Mesh):
+def make_phase_fns(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
+                   eplan=None, caps: Optional[dict] = None):
     """Separately-jitted shard_map'd phases over `mesh`:
 
         (phase_a(state, t), exchange(spiked), phase_b(state, spiked_src, t))
@@ -177,24 +258,27 @@ def make_phase_fns(spec: SimSpec, plan: ShardPlan, mesh: Mesh):
     by `repro.cluster` to attribute wall-clock to phase A / spike exchange
     / phase B per process (paper Table 2, across the process axis).  The
     placed plan is bound into each returned fn as a jit argument; `plan`
-    must be host-addressable, as in `make_sharded_run`."""
+    must be host-addressable, as in `make_sharded_run`.  Dispatches on
+    spec.eng.delivery exactly like `make_sharded_run` (same `eplan`/`caps`
+    contract), so per-phase walls are comparable across backends."""
     stim_k = stimulus.stim_key(spec.cfg)
     exchange = _make_exchange(spec, plan)
-    pspec, plan_specs, state_specs, tm_specs = _specs(plan)
-    plan_d = dist_sharding.shard_put(mesh, plan, "cells")
+    planT = _plan_tree(spec, plan, eplan)
+    pa, pb = _delivery_phases(spec, stim_k, caps)
+    pspec, plan_specs, state_specs, tm_specs = _specs(spec, planT)
+    plan_d = dist_sharding.shard_put(mesh, planT, "cells")
 
     def a_body(plan_s, state_s, t):
-        state_1, spiked, tm = engine.phase_a(
-            spec, _drop_lead(plan_s), _drop_lead(state_s), t, stim_k)
+        state_1, spiked, tm = pa(_drop_lead(plan_s), _drop_lead(state_s), t)
         return (jax.tree.map(lambda x: x[None], state_1), spiked[None],
                 jax.tree.map(lambda x: x[None], tm))
 
     def ex_body(plan_s, spiked_s):
-        return exchange(_drop_lead(plan_s), spiked_s[0])[None]
+        return exchange(_base_plan(_drop_lead(plan_s)), spiked_s[0])[None]
 
     def b_body(plan_s, state_s, spiked_src_s, t):
-        state_1 = engine.phase_b(spec, _drop_lead(plan_s),
-                                 _drop_lead(state_s), spiked_src_s[0], t)
+        state_1 = pb(_drop_lead(plan_s), _drop_lead(state_s),
+                     spiked_src_s[0], t)
         return jax.tree.map(lambda x: x[None], state_1)
 
     sm = dist_compat.shard_map
@@ -214,6 +298,45 @@ def make_phase_fns(spec: SimSpec, plan: ShardPlan, mesh: Mesh):
     phase_b = lambda state, spiked_src, t: b_j(plan_d, state, spiked_src,
                                                tput(t))
     return phase_a, exchange_fn, phase_b
+
+
+def time_phases(phase_fns, state, t0: int, n_steps: int,
+                collect_rasters: bool = False):
+    """Per-step wall-clock attribution over `make_phase_fns` output — the
+    paper's Table 2 split, shared by `repro.cluster.worker` and the
+    `event_vs_dense` bench suite so the warmup/blocking discipline cannot
+    drift between them.
+
+    Returns (final_state, times, rasters): `times` accumulates
+    phase_a_s/exchange_s/phase_b_s over `n_steps` steps (each phase
+    `block_until_ready`-fenced), `rasters` is a list of per-step [H, N]
+    numpy spike masks when `collect_rasters` else None.  The three
+    programs are warmed up (compiled) on `state` first; `state` itself is
+    never mutated."""
+    phase_a, exchange, phase_b = phase_fns
+    s_w, spk_w, _ = phase_a(state, t0)
+    src_w = exchange(spk_w)
+    jax.block_until_ready(phase_b(s_w, src_w, t0))
+
+    times = dict(phase_a_s=0.0, exchange_s=0.0, phase_b_s=0.0)
+    rasters = [] if collect_rasters else None
+    s = state
+    for t in range(t0, t0 + n_steps):
+        c0 = time.perf_counter()
+        s2, spiked, _ = phase_a(s, t)
+        jax.block_until_ready(spiked)
+        times["phase_a_s"] += time.perf_counter() - c0
+        c0 = time.perf_counter()
+        spiked_src = exchange(spiked)
+        jax.block_until_ready(spiked_src)
+        times["exchange_s"] += time.perf_counter() - c0
+        c0 = time.perf_counter()
+        s = phase_b(s2, spiked_src, t)
+        jax.block_until_ready(s)
+        times["phase_b_s"] += time.perf_counter() - c0
+        if collect_rasters:
+            rasters.append(np.asarray(spiked))
+    return s, times, rasters
 
 
 def shard_put(mesh: Mesh, tree):

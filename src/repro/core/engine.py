@@ -90,11 +90,15 @@ def _owned_columns_padded(cfg, eng, shard, c_cap):
 
 def build(cfg: GridConfig, eng: EngineConfig,
           izh: IzhikevichParams = DEFAULT_IZH,
-          stdp: StdpParams = DEFAULT_STDP
-          ) -> Tuple[SimSpec, ShardPlan, ShardState]:
+          stdp: StdpParams = DEFAULT_STDP,
+          tables=None) -> Tuple[SimSpec, ShardPlan, ShardState]:
     """Build plans + initial state for all shards, stacked on a leading [H]
-    axis.  Construction is fully local per shard (zero communication)."""
-    tables = connectivity.build_all_shards(cfg, eng)
+    axis.  Construction is fully local per shard (zero communication).
+    `tables` optionally reuses prebuilt `connectivity.build_all_shards`
+    output so callers layering extra plans on top (the event backend) pay
+    the host-side construction once."""
+    if tables is None:
+        tables = connectivity.build_all_shards(cfg, eng)
     H = eng.n_shards
     n_cap = topology.max_local_size(cfg, H, eng.placement)
     e_cap = tables[0].src_idx.shape[0]

@@ -21,6 +21,21 @@ fixed-capacity AER buffers degrade.  With default caps sized from the
 paper's rate band (<=60 Hz) saturation never triggers in practice
 (asserted in tests).
 
+All compaction is sort-free: a cumsum over the selection mask assigns
+each selected element its rank, and one scatter writes the compacted
+list — O(N) work instead of the O(N log N) `jnp.sort` this backend used
+to pay twice per step, and emission fills all D ring slots in a single
+scatter (per-slot ranks from one cumsum over a [D, C*Kf] one-hot) where
+it used to make D sequential `.at[].set` round-trips over the ring.
+
+`phase_a`/`phase_b` are written against per-shard arrays, exactly like
+`engine.phase_a/phase_b`: the same functions run under `vmap` (logical
+shards, single device) and under `shard_map` with real collectives
+(`core.distributed` dispatches on EngineConfig.delivery).  The exchange
+wire is shared with the dense backend — its output `spiked_src` is
+precisely phase_b's input — so halo and allgather schedules compose with
+event delivery unchanged.
+
 Equivalence: identical rasters + weights vs the dense backend
 (tests/test_event_engine.py); fp32 summation order differs (scatter-add vs
 canonical-order segment_sum), so weights match to ~1e-5 rather than
@@ -28,14 +43,15 @@ bit-exactly — documented backend trade.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import connectivity, engine, stimulus
-from .engine import NEG_TIME, ShardPlan, ShardState, SimSpec
+from .aer import compact_indices as _compact
+from .engine import NEG_TIME, ShardPlan, ShardState, SimSpec, StepTimings
 
 
 class EventPlan(NamedTuple):
@@ -50,6 +66,16 @@ class EventState(NamedTuple):
     sat: jnp.ndarray          # [] int32 dropped events (overflow counter)
 
 
+def default_caps(spec: SimSpec) -> Tuple[int, int]:
+    """(c_post, c_src) spike-compaction capacities.
+
+    Paper rates keep spikes/step far below N (<= ~6% at 60 Hz); N/2 and
+    S/8 are comfortable headroom, the floors keep tiny test grids from
+    degenerating.  Overflow is counted in `sat`, never corrupting."""
+    n, s = spec.n_local, spec.s_cap
+    return min(n, max(64, n // 2)), min(s, max(128, s // 8))
+
+
 def _pad_rows(groups, n_rows: int, pad_to: int) -> np.ndarray:
     out = np.full((n_rows, pad_to), -1, dtype=np.int32)
     for r, ids in groups.items():
@@ -57,13 +83,16 @@ def _pad_rows(groups, n_rows: int, pad_to: int) -> np.ndarray:
     return out
 
 
-def build_event_plan(spec: SimSpec, cap_ev_factor: float = 0.25
-                     ) -> Tuple[EventPlan, int]:
+def build_event_plan(spec: SimSpec, cap_ev_factor: float = 0.25,
+                     tables=None) -> Tuple[EventPlan, int]:
     """Build padded forward/incoming rows for every shard (stacked [H,...]).
 
     cap_ev: events per delay slot, sized as factor * E (paper rates keep
-    arrivals per-ms far below E; 0.25 is ~5x headroom at 60 Hz)."""
-    tables = connectivity.build_all_shards(spec.cfg, spec.eng)
+    arrivals per-ms far below E; 0.25 is ~5x headroom at 60 Hz).  `tables`
+    optionally reuses connectivity tables already built for this (cfg,
+    eng) — table construction is the most expensive host-side step."""
+    if tables is None:
+        tables = connectivity.build_all_shards(spec.cfg, spec.eng)
     fwd_all, in_all = [], []
     kf_max = ki_max = 1
     groups_fwd, groups_in = [], []
@@ -110,12 +139,19 @@ def init_event_state(spec: SimSpec, base: ShardState, cap_ev: int
 
 
 def phase_a(spec: SimSpec, plan: ShardPlan, eplan: EventPlan,
-            st: EventState, t: jnp.ndarray, stim_k):
+            st: EventState, t: jnp.ndarray, stim_k,
+            c_post: Optional[int] = None
+            ) -> Tuple[EventState, jnp.ndarray, StepTimings]:
+    """Local dynamics on the event subset; returns (state', spiked, tm) —
+    the same contract as `engine.phase_a`, so the distributed drivers can
+    dispatch between backends without branching downstream."""
     cfg, stdp, izh = spec.cfg, spec.stdp, spec.izh
     D = cfg.n_delay_slots
     tf = t.astype(jnp.float32)
     r = jnp.mod(t, D)
     base = st.base
+    if c_post is None:
+        c_post = default_caps(spec)[0]
 
     # ---- arrivals: only this slot's event list ----
     ev = st.ev_ring[r]                                  # [cap_ev]
@@ -155,9 +191,7 @@ def phase_a(spec: SimSpec, plan: ShardPlan, eplan: EventPlan,
 
     # ---- LTP: incoming rows of the COMPACTED spiking-neuron list ----
     n = spec.n_local
-    c_post = min(n, max(64, n // 2))       # paper rates: <=6% spike/step
-    spk_ids = jnp.sort(jnp.where(spiked, jnp.arange(n), n))[:c_post]
-    post_sat = jnp.maximum(0, spiked.sum(dtype=jnp.int32) - c_post)
+    spk_ids, post_sat = _compact(spiked, c_post, fill=n)
     rows = eplan.in_rows[jnp.minimum(spk_ids, n - 1)]    # [C_post, Ki]
     e_in = jnp.where((spk_ids < n)[:, None], rows, -1).reshape(-1)
     vin = e_in >= 0
@@ -175,41 +209,50 @@ def phase_a(spec: SimSpec, plan: ShardPlan, eplan: EventPlan,
         base=base._replace(v=v, u=u, w=w, last_arr=last_arr,
                            last_post=last_post),
         ev_ring=ev_ring, ev_count=ev_count, sat=st.sat + post_sat)
-    return new, spiked
+    tm = StepTimings(spikes=spiked.sum(),
+                     arrivals=valid.sum(dtype=jnp.int32))
+    return new, spiked, tm
 
 
 def phase_b(spec: SimSpec, plan: ShardPlan, eplan: EventPlan,
-            st: EventState, spiked_src: jnp.ndarray, t: jnp.ndarray
-            ) -> EventState:
+            st: EventState, spiked_src: jnp.ndarray, t: jnp.ndarray,
+            c_src: Optional[int] = None) -> EventState:
     """Emission: append the spiking sources' synapse ids to the ring.
 
     The spiking source set is compacted first (event-sized gather of
-    forward rows, O(spikes x fan) rather than O(S x Kf))."""
+    forward rows, O(spikes x fan) rather than O(S x Kf)).  All D ring
+    slots are filled in ONE scatter: per-slot ranks come from a single
+    cumsum over the [D, C*Kf] one-hot-by-slot matrix (D is 6), replacing
+    the former Python loop of D sequential ranked `.at[].set` passes —
+    each of which re-copied the ring on CPU."""
     D = spec.cfg.n_delay_slots
     cap = st.ev_ring.shape[-1]
     S = spiked_src.shape[0]
-    c_src = min(S, max(128, S // 8))       # cap; overflow -> sat counter
-    src_ids = jnp.sort(jnp.where(spiked_src, jnp.arange(S), S))[:c_src]
-    src_sat = jnp.maximum(0, spiked_src.sum(dtype=jnp.int32) - c_src)
+    if c_src is None:
+        c_src = default_caps(spec)[1]
+    src_ids, src_sat = _compact(spiked_src, c_src, fill=S)
     rows = eplan.fwd_rows[jnp.minimum(src_ids, S - 1)]   # [C_src, Kf]
     ids = jnp.where((src_ids < S)[:, None], rows, -1).reshape(-1)
     valid = ids >= 0
     idc = jnp.maximum(ids, 0)
-    slot = jnp.mod(t + plan.syn_delay[idc], D)
+    slot = jnp.mod(t + plan.syn_delay[idc], D)           # [L]
 
-    ev_ring, ev_count, sat = st.ev_ring, st.ev_count, st.sat + src_sat
-    for d_ in range(D):
-        sel = valid & (slot == d_)
-        rank = jnp.cumsum(sel) - 1                      # rank within slot
-        pos = ev_count[d_] + jnp.where(sel, rank, cap + 1)
-        overflow = jnp.maximum(
-            0, ev_count[d_] + sel.sum(dtype=jnp.int32) - cap)
-        ev_ring = ev_ring.at[d_, jnp.minimum(pos, cap + 1)].set(
-            jnp.where(sel, ids, -1), mode="drop")
-        ev_count = ev_count.at[d_].set(
-            jnp.minimum(ev_count[d_] + sel.sum(dtype=jnp.int32), cap))
-        sat = sat + overflow
-    return st._replace(ev_ring=ev_ring, ev_count=ev_count, sat=sat)
+    # per-slot ranks in one pass: rank[i] = #earlier events in i's slot
+    L = ids.shape[0]
+    onehot = valid[None, :] & (slot[None, :]
+                               == jnp.arange(D, dtype=slot.dtype)[:, None])
+    rank = (jnp.cumsum(onehot, axis=1) - 1)[slot, jnp.arange(L)]
+    per_slot = onehot.sum(axis=1, dtype=jnp.int32)       # [D]
+    pos = st.ev_count[slot] + rank                       # [L] slot position
+    ok = valid & (pos < cap)
+    flat_pos = jnp.where(ok, slot * cap + pos, D * cap)  # oob -> drop
+    ev_ring = st.ev_ring.reshape(-1).at[flat_pos].set(
+        ids, mode="drop").reshape(D, cap)
+    ev_count = jnp.minimum(st.ev_count + per_slot, cap)
+    overflow = jnp.maximum(
+        0, st.ev_count + per_slot - cap).sum(dtype=jnp.int32)
+    return st._replace(ev_ring=ev_ring, ev_count=ev_count,
+                       sat=st.sat + src_sat + overflow)
 
 
 # ---------------------------------------------------------------------------
@@ -218,36 +261,46 @@ def phase_b(spec: SimSpec, plan: ShardPlan, eplan: EventPlan,
 
 
 def build(cfg, eng, izh=None, stdp=None):
-    """(spec, plan, eplan, state, cap_ev) for the event backend."""
+    """(spec, plan, eplan, state) for the event backend.
+
+    Connectivity tables are built ONCE and shared between the dense plan
+    and the event rows (they used to be rebuilt from scratch — the most
+    expensive host-side construction step, doubled for nothing)."""
     from .params import DEFAULT_IZH, DEFAULT_STDP
+    tables = connectivity.build_all_shards(cfg, eng)
     spec, plan, base = engine.build(cfg, eng, izh or DEFAULT_IZH,
-                                    stdp or DEFAULT_STDP)
-    eplan, cap_ev = build_event_plan(spec)
+                                    stdp or DEFAULT_STDP, tables=tables)
+    eplan, cap_ev = build_event_plan(spec, tables=tables)
     state = init_event_state(spec, base, cap_ev)
     return spec, plan, eplan, state
 
 
-def make_step_fn(spec: SimSpec, plan: ShardPlan, eplan: EventPlan):
+def make_step_fn(spec: SimSpec, plan: ShardPlan, eplan: EventPlan,
+                 c_post: Optional[int] = None, c_src: Optional[int] = None):
     stim_k = stimulus.stim_key(spec.cfg)
 
     def step(state: EventState, t: jnp.ndarray):
-        state, spiked = jax.vmap(
-            lambda p, ep, s: phase_a(spec, p, ep, s, t, stim_k)
+        state, spiked, tm = jax.vmap(
+            lambda p, ep, s: phase_a(spec, p, ep, s, t, stim_k,
+                                     c_post=c_post)
         )(plan, eplan, state)
         glob = engine._global_spike_mask(spec, plan, spiked)
         spiked_src = jax.vmap(
             lambda p: glob.at[p.src_gid].get(mode="fill", fill_value=False)
             & (p.src_gid >= 0))(plan)
         state = jax.vmap(
-            lambda p, ep, s, ss: phase_b(spec, p, ep, s, ss, t)
+            lambda p, ep, s, ss: phase_b(spec, p, ep, s, ss, t, c_src=c_src)
         )(plan, eplan, state, spiked_src)
-        return state, spiked
+        return state, (spiked, tm)
 
     return step
 
 
-def run(spec, plan, eplan, state, t0: int, n_steps: int):
-    step = make_step_fn(spec, plan, eplan)
+def run(spec, plan, eplan, state, t0: int, n_steps: int,
+        c_post: Optional[int] = None, c_src: Optional[int] = None):
+    """Scan the simulation; returns (state, raster[T, H, N], timings) —
+    the same contract as `engine.run`."""
+    step = make_step_fn(spec, plan, eplan, c_post=c_post, c_src=c_src)
     ts = jnp.arange(t0, t0 + n_steps, dtype=jnp.int32)
-    state, raster = jax.lax.scan(step, state, ts)
-    return state, raster
+    state, (raster, tm) = jax.lax.scan(step, state, ts)
+    return state, raster, tm

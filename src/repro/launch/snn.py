@@ -2,7 +2,13 @@
 
   python -m repro.launch.snn --grid 4x4 --steps 500 [--shards 4]
       [--exchange halo|allgather] [--placement block|scatter]
+      [--delivery dense|event]
       [--profile ring3|gaussian:sigma=1.5|...] [--ckpt-dir DIR]
+
+`--delivery event` runs the paper's event-driven synaptic formulation
+(O(spikes x fan-out) per step) instead of the dense O(E) masked one; both
+support every layout knob — shard counts, exchange modes, placements,
+cluster jobs, checkpointing.
 
 With --shards > 1 this process must be started with
 XLA_FLAGS=--xla_force_host_platform_device_count=<H> (or run on a real
@@ -27,8 +33,8 @@ cluster_runtime.ensure_initialized()
 import jax
 import numpy as np
 
-from repro.core import (EngineConfig, GridConfig, build, checkpoint,
-                        observables, profiles, run)
+from repro.core import (EngineConfig, GridConfig, build_delivery,
+                        checkpoint, observables, profiles, run_delivery)
 from repro.core import distributed as D
 
 
@@ -70,24 +76,16 @@ def main():
               f"{args.placement}, {prof.spec()} reach={prof.reach()}"
               f"{procs})")
 
-    if args.delivery == "event":
-        assert args.shards == 1, "event backend: single-process CLI path"
-        from repro.core import event_engine as EV
-        import jax as _jax
-        spec, plan, eplan, estate = EV.build(cfg, eng)
-        estate, raster = _jax.jit(
-            lambda s: EV.run(spec, plan, eplan, s, 0, args.steps))(estate)
-        rate = observables.mean_rate_hz(np.asarray(raster), cfg.n_neurons)
-        print(f"[snn] (event backend) rate {rate:.1f} Hz, saturated "
-              f"{int(np.asarray(estate.sat).sum())}")
-        return
-
-    spec, plan, state = build(cfg, eng)
+    # Build: the event backend layers an EventPlan + EventState on top of
+    # the dense plan; every downstream path (run loop, checkpoint,
+    # sharding, cluster gather) is backend-generic from here on.
+    event = args.delivery == "event"
+    spec, plan, eplan, state, cap_ev = build_delivery(cfg, eng)
     t0 = 0
     if args.ckpt_dir:
         latest = checkpoint.latest(args.ckpt_dir)
         if latest:
-            state, t0 = checkpoint.load(latest, spec, plan)
+            state, t0 = checkpoint.load(latest, spec, plan, cap_ev=cap_ev)
             if cluster_runtime.is_primary():
                 print(f"[snn] resumed at t={t0} from {latest}")
 
@@ -98,7 +96,7 @@ def main():
             "or launch more processes (repro.cluster.local)"
         mesh = D.make_mesh(args.shards)
         state_d = D.shard_put(mesh, state)
-        runner = D.make_sharded_run(spec, plan, mesh)
+        runner = D.make_sharded_run(spec, plan, mesh, eplan=eplan)
         chunk = args.ckpt_every or args.steps
         t = t0
         while t < t0 + args.steps:
@@ -118,7 +116,7 @@ def main():
         t = t0
         while t < t0 + args.steps:
             n = min(chunk, t0 + args.steps - t)
-            state, raster, tm = run(spec, plan, state, t, n)
+            state, raster, tm = run_delivery(spec, plan, eplan, state, t, n)
             t += n
             # primary-only for the same reason as the sharded branch: a
             # cluster job with --shards 1 runs one replica per process,
@@ -130,8 +128,20 @@ def main():
 
     raster_h = cluster_runtime.gather(raster)
     rate = observables.mean_rate_hz(np.asarray(raster_h), cfg.n_neurons)
+    sat = None
+    if event:
+        # sharded state spans processes -> gather assembles each global
+        # shard once (a collective; every process participates).  In the
+        # replica case (--shards 1, one copy per process) every replica
+        # holds the identical counter, and gathering would stack P copies
+        # and over-count the sum P-fold — read it locally instead.
+        sat_arr = cluster_runtime.gather(state.sat) if args.shards > 1 \
+            else state.sat
+        sat = int(np.asarray(sat_arr).sum())
     if cluster_runtime.is_primary():
-        print(f"[snn] final-window rate {rate:.1f} Hz; done at t={t} ms")
+        tail = f", saturated {sat}" if event else ""
+        print(f"[snn] final-window rate {rate:.1f} Hz; done at t={t} ms"
+              f"{tail}")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,16 @@
 """Checkpoint/restart and ELASTIC resharding: a checkpoint saved at H shards
-must restore at H' shards / another placement and continue bit-identically."""
+must restore at H' shards / another placement and continue bit-identically —
+for BOTH delivery backends (the event ring is persisted as canonical
+per-slot flags, so it reshards exactly like the dense arrival ring)."""
 import os
 
+import jax
 import numpy as np
 import pytest
 
 from repro.core import (EngineConfig, GridConfig, build, checkpoint,
                         observables, run)
+from repro.core import event_engine as EV
 
 CFG = GridConfig(grid_x=2, grid_y=2, neurons_per_column=80,
                  synapses_per_neuron=30, seed=13)
@@ -65,3 +69,117 @@ def test_latest_discovery(tmp_path):
     _run_and_ckpt(tmp_path, eng, 5)
     _run_and_ckpt(tmp_path, eng, 10)
     assert checkpoint.latest(str(tmp_path)).endswith("ckpt_10.npz")
+
+
+# ---------------------------------------------------------------------------
+# event backend: same layout-free format, same elasticity
+# ---------------------------------------------------------------------------
+
+
+def _event_run(built, state, t0, steps):
+    spec, plan, eplan, _ = built
+    return jax.jit(lambda s: EV.run(spec, plan, eplan, s, t0, steps))(state)
+
+
+def _event_built(n_shards):
+    eng = EngineConfig(n_shards=n_shards, delivery="event")
+    return EV.build(CFG, eng)
+
+
+def test_event_restart_bit_identical(tmp_path):
+    """event run(0..60) == run(0..30) + restart(30..60), same layout."""
+    built = _event_built(2)
+    spec, plan, eplan, state = built
+    _, raster_full, _ = _event_run(built, state, 0, 60)
+    sig_tail = observables.raster_signature(
+        np.asarray(raster_full)[30:], np.asarray(plan.gid))
+
+    st30, _, _ = _event_run(built, state, 0, 30)
+    path = os.path.join(str(tmp_path), "ckpt_30.npz")
+    checkpoint.save(path, spec, plan, st30, 30)
+    st_r, t = checkpoint.load(path, spec, plan,
+                              cap_ev=state.ev_ring.shape[-1])
+    assert t == 30
+    assert isinstance(st_r, EV.EventState)
+    _, raster_cont, _ = _event_run(built, st_r, 30, 30)
+    sig = observables.raster_signature(np.asarray(raster_cont),
+                                       np.asarray(plan.gid))
+    assert sig == sig_tail
+
+
+def test_event_ring_order_round_trips_exactly(tmp_path):
+    """Same-layout restore must rebuild the ring lists in the EXACT live
+    order, not a canonicalized one: phase_a's fp32 scatter-add
+    accumulates in list order, so reordering would fork the trajectory
+    bitwise in any workload with >= 3 same-slot arrivals per target.
+    A dense high-stim workload makes the slot lists long and interleaved
+    across emission steps — the regime where order loss shows."""
+    cfg = GridConfig(grid_x=2, grid_y=2, neurons_per_column=120,
+                     synapses_per_neuron=80, seed=13,
+                     stim_events_per_ms_per_column=3)
+    eng = EngineConfig(n_shards=2, delivery="event")
+    spec, plan, eplan, state = EV.build(cfg, eng)
+    cap_ev = state.ev_ring.shape[-1]
+    built = (spec, plan, eplan, state)
+    st30, _, _ = _event_run(built, state, 0, 30)
+    assert int(np.asarray(st30.ev_count).sum()) > 0, "need pending events"
+
+    path = os.path.join(str(tmp_path), "ckpt_30.npz")
+    checkpoint.save(path, spec, plan, st30, 30)
+    st_r, _ = checkpoint.load(path, spec, plan, cap_ev=cap_ev)
+    # the whole ring — ids AND order — must round-trip bit-exactly
+    assert np.array_equal(np.asarray(st_r.ev_ring), np.asarray(st30.ev_ring))
+    assert np.array_equal(np.asarray(st_r.ev_count),
+                          np.asarray(st30.ev_count))
+    # and the continuation must be bitwise the uninterrupted run
+    _, r_cont, _ = _event_run(built, st30, 30, 30)
+    _, r_rest, _ = _event_run(built, st_r, 30, 30)
+    assert np.array_equal(np.asarray(r_rest), np.asarray(r_cont))
+
+
+@pytest.mark.parametrize("h2", [1, 4])
+def test_event_elastic_reshard(tmp_path, h2):
+    """event checkpoint at H=2, restore at H'=1/4: same spikes — pending
+    ring events re-key by canonical synapse id like weights do."""
+    built = _event_built(2)
+    spec, plan, eplan, state = built
+    _, raster_full, _ = _event_run(built, state, 0, 60)
+    sig_tail = observables.raster_signature(
+        np.asarray(raster_full)[30:], np.asarray(plan.gid))
+
+    st30, _, _ = _event_run(built, state, 0, 30)
+    path = os.path.join(str(tmp_path), "ckpt_30.npz")
+    checkpoint.save(path, spec, plan, st30, 30)
+
+    built2 = _event_built(h2)
+    spec2, plan2, eplan2, state2 = built2
+    st_r, t = checkpoint.load(path, spec2, plan2,
+                              cap_ev=state2.ev_ring.shape[-1])
+    assert t == 30
+    _, raster_cont, _ = _event_run(built2, st_r, 30, 30)
+    sig = observables.raster_signature(np.asarray(raster_cont),
+                                       np.asarray(plan2.gid))
+    assert sig == sig_tail
+
+
+def test_delivery_mode_guard(tmp_path):
+    """A dense checkpoint must refuse to load into an event config and
+    vice versa — the backends' fp32 summation orders differ, so a silent
+    cross-mode restore would fork the trajectory."""
+    eng_d = EngineConfig(n_shards=2)
+    spec_d, plan_d, state_d = build(CFG, eng_d)
+    state_d, _, _ = run(spec_d, plan_d, state_d, 0, 10)
+    p_dense = os.path.join(str(tmp_path), "ckpt_dense.npz")
+    checkpoint.save(p_dense, spec_d, plan_d, state_d, 10)
+
+    built = _event_built(2)
+    spec_e, plan_e, eplan_e, state_e = built
+    st10, _, _ = _event_run(built, state_e, 0, 10)
+    p_event = os.path.join(str(tmp_path), "ckpt_event.npz")
+    checkpoint.save(p_event, spec_e, plan_e, st10, 10)
+
+    with pytest.raises(AssertionError, match="delivery mode mismatch"):
+        checkpoint.load(p_event, spec_d, plan_d)
+    with pytest.raises(AssertionError, match="delivery mode mismatch"):
+        checkpoint.load(p_dense, spec_e, plan_e,
+                        cap_ev=state_e.ev_ring.shape[-1])

@@ -43,6 +43,23 @@ def test_halo_exchange_across_processes():
     assert row["raster_sig"] == ref
 
 
+def test_event_delivery_across_processes():
+    """The EVENT backend across a real process boundary: a 2-proc x
+    2-shard event run must produce rasters bit-identical to the 1-process
+    event driver for the same config — the Table 1 invariant extended to
+    the event delivery mode, over the process axis, on the sparse halo
+    wire."""
+    require_cluster()
+    args = cli.workload_namespace(**WORKLOAD, delivery="event",
+                                  exchange="halo")
+    row = cli.run_point(args, nprocs=2, timeout=600)
+    assert row["delivery"] == "event"
+    assert row.get("saturated", 0) == 0, "event caps saturated in smoke"
+    ref = cli.reference_signature(args)
+    assert row["raster_sig"] == ref, \
+        "cross-process event raster differs from the 1-process event run"
+
+
 def test_nondefault_profile_across_processes():
     """The Table 1 invariant must hold across the process axis at a
     wider-than-paper connectivity reach (gaussian sigma=1.5 -> reach 5).

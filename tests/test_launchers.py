@@ -19,7 +19,26 @@ def test_snn_cli_dense_and_event(tmp_path):
         "'--neurons-per-column','200','--synapses','20','--steps','80',"
         "'--delivery','event'];"
         "from repro.launch.snn import main; main()", 1)
-    assert "event backend" in out
+    assert "done at t=80" in out and "saturated 0" in out
+
+
+@pytest.mark.slow
+def test_snn_cli_event_distributed_with_checkpoint(tmp_path):
+    """--delivery event is a first-class citizen of the sharded launcher:
+    shards>1, halo exchange, checkpoint write + resume."""
+    code = (
+        "import sys; sys.argv=['snn','--grid','2x1',"
+        "'--neurons-per-column','100','--synapses','20','--steps','60',"
+        "'--shards','2','--exchange','halo','--delivery','event',"
+        f"'--ckpt-dir',{str(tmp_path)!r},'--ckpt-every','30'];"
+        "from repro.launch.snn import main; main()")
+    out = run_with_devices(code, 2)
+    assert "done at t=60" in out
+    assert os.path.exists(os.path.join(str(tmp_path), "ckpt_60.npz"))
+    # resume from the event-mode checkpoint
+    code2 = code.replace("'--steps','60'", "'--steps','30'")
+    out2 = run_with_devices(code2, 2)
+    assert "resumed at t=60" in out2
 
 
 @pytest.mark.slow
