@@ -17,8 +17,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import (EngineConfig, GridConfig, build, checkpoint,
-                        observables, run)
+from repro.core import (EngineConfig, GridConfig, StepProgram, checkpoint,
+                        observables)
 from repro.core import distributed as D
 
 STEPS1, STEPS2 = 150, 150
@@ -35,17 +35,16 @@ def main():
           f"{cfg.n_synapses} synapses over {eng.n_shards} shards (halo "
           "exchange)")
 
-    spec, plan, state = build(cfg, eng)
+    sp = StepProgram(cfg, eng, mesh=D.make_mesh(4))
+    spec, plan = sp.spec, sp.plan
     offs = D.halo_offsets(spec, plan)
     print(f"static halo schedule: {len(offs)} shard offsets "
           f"(vs {eng.n_shards}-way all-to-all)")
 
-    mesh = D.make_mesh(4)
-    state_d = D.shard_put(mesh, state)
-    runner = D.make_sharded_run(spec, plan, mesh)
+    state_d = sp.place(sp.init_state())
 
     print(f"phase 1: {STEPS1} ms on 4 shards ...")
-    state_d, raster1, tm = runner(state_d, 0, STEPS1)
+    state_d, raster1, tm = sp.run(state_d, 0, STEPS1)
     rate = observables.mean_rate_hz(np.asarray(raster1), cfg.n_neurons)
     print(f"  rate {rate:.1f} Hz, spikes/step "
           f"{np.asarray(tm.spikes).sum(1).mean():.1f}")
@@ -55,17 +54,16 @@ def main():
     print(f"  checkpoint -> {ck}")
 
     # continue on 4 shards
-    state_d, raster2a, _ = runner(state_d, STEPS1, STEPS2)
+    state_d, raster2a, _ = sp.run(state_d, STEPS1, STEPS2)
     sig_a = observables.raster_signature(np.asarray(raster2a),
                                          np.asarray(plan.gid))
 
     # ELASTIC restart: same checkpoint, 2 shards, scatter placement
-    eng2 = EngineConfig(n_shards=2, placement="scatter")
-    spec2, plan2, _ = build(cfg, eng2)
-    state2, t0 = checkpoint.load(ck, spec2, plan2)
-    _, raster2b, _ = run(spec2, plan2, state2, t0, STEPS2)
+    sp2 = StepProgram(cfg, EngineConfig(n_shards=2, placement="scatter"))
+    state2, t0 = sp2.load(ck)
+    _, raster2b, _ = sp2.run(state2, t0, STEPS2)
     sig_b = observables.raster_signature(np.asarray(raster2b),
-                                         np.asarray(plan2.gid))
+                                         np.asarray(sp2.plan.gid))
 
     assert sig_a == sig_b, "elastic restart changed the spike raster!"
     print("phase 2: identical rasters on 4-shard continue vs 2-shard "

@@ -17,7 +17,11 @@ Shards are logical (`vmap` over the stacked [H, ...] plan) so the profile
 runs on a single device: the halo route is emulated with `jnp.roll` over
 the shard axis, which preserves the exchange's full compute graph (AER
 pack/sort, scatter-match) while the wire itself is measured by the
-multi-process scaling suite.  Alongside wall-clock, each cell records the
+multi-process scaling suite.  Both the phase handles and the timing loop
+come from `core.StepProgram` (mesh=None), so the profiler, the cluster
+worker and the bench suites time the SAME machinery — the loop is
+schedule-aware, attributing only the exposed remainder of a pipelined
+exchange to exchange_s.  Alongside wall-clock, each cell records the
 deterministic counters (total spikes/arrivals, raster signature) and the
 trip-count-aware HLO flops/bytes of the fused step
 (`launch/hlo_cost.py`) — the metrics the baseline comparator gates hard.
@@ -31,88 +35,42 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import aer, engine, observables, stimulus
-from ..core import distributed as dcore
+from ..core import StepProgram, engine, observables
 from ..core.params import EngineConfig, GridConfig
 
 EXCHANGES = ("allgather", "halo")
 PLACEMENTS = ("block", "scatter")
 
 
-def make_phase_fns(spec, plan) -> Tuple:
-    """(phase_a, exchange, phase_b, fused_step) jitted over stacked shards.
+def profiled_phase_fns(spec, plan, eplan=None, caps=None):
+    """Unified-signature phase handles for single-device profiling.
 
-    `exchange` matches `spec.eng.exchange`.  The plan is an explicit
-    argument of every jitted function, NOT a closure: closed-over arrays
-    lower to XLA literal constants, which the CPU backend re-materializes
-    on every execution — measured ~50x slower per phase call at 200k
-    synapses.  `plan` here is only used to derive the static halo offsets.
-    """
-    stim_k = stimulus.stim_key(spec.cfg)
-
-    def _phase_a(plan, state, t):
-        return jax.vmap(
-            lambda p, s: engine.phase_a(spec, p, s, t, stim_k))(plan, state)
-
-    def _ex_allgather(plan, spiked):
-        glob = engine._global_spike_mask(spec, plan, spiked)
-        return jax.vmap(
-            lambda p: glob.at[p.src_gid].get(mode="fill", fill_value=False)
-            & (p.src_gid >= 0))(plan)
-
-    offsets = dcore.halo_offsets(spec, plan) \
-        if spec.eng.exchange == "halo" else None
-
-    def _ex_halo(plan, spiked):
-        ids_all, _ = jax.vmap(
-            lambda p, s: aer.pack(s, p.gid, p.gid.shape[0]))(plan, spiked)
-        # receiver h hears sender (h - d) % H: the single-device analogue of
-        # the ppermute in core.distributed._spiked_src_halo
-        received = [jnp.roll(ids_all, d, axis=0) for d in offsets]
-        all_ids = jnp.concatenate(received, axis=1)
-
-        def match(p, ids_row):
-            mask = jnp.zeros((spec.n_total,), bool).at[ids_row].set(
-                True, mode="drop")
-            return mask.at[p.src_gid].get(mode="fill", fill_value=False) \
-                & (p.src_gid >= 0)
-
-        return jax.vmap(match)(plan, all_ids)
-
-    _exchange = _ex_halo if spec.eng.exchange == "halo" else _ex_allgather
-
-    def _phase_b(plan, state, spiked_src, t):
-        return jax.vmap(
-            lambda p, s, x: engine.phase_b(spec, p, s, x, t))(plan, state,
-                                                              spiked_src)
-
-    def _fused(plan, state, t):
-        state, spiked, tm = _phase_a(plan, state, t)
-        spiked_src = _exchange(plan, spiked)
-        state = _phase_b(plan, state, spiked_src, t)
-        return state, spiked, tm
-
-    return (jax.jit(_phase_a), jax.jit(_exchange), jax.jit(_phase_b),
-            jax.jit(_fused))
+    A thin route into `StepProgram.phase_fns` (mesh=None) kept for
+    callers that already hold built parts.  Its predecessor (a module-
+    local `make_phase_fns`) shadowed `core.distributed.make_phase_fns`
+    while constructing a *different* program; routing both the profiler
+    and the cluster worker through StepProgram removes the collision and
+    the drift."""
+    return StepProgram.from_parts(spec, plan, eplan, caps=caps).phase_fns()
 
 
-def _hlo_step_cost(fused, plan, state) -> Tuple[int, int]:
+def _hlo_step_cost(sp: StepProgram, state) -> Tuple[int, int]:
     """(flops, bytes) of one fused step from the optimized HLO."""
     from ..launch import hlo_cost
-    compiled = fused.lower(plan, state, jnp.int32(0)).compile()
+    compiled = sp.fused.lower(sp.planT, state, jnp.int32(0)).compile()
     parsed = hlo_cost.analyze(compiled.as_text())
     return int(round(parsed["flops"])), int(round(parsed["bytes"]))
 
 
 def profile_cell(cfg: GridConfig, eng: EngineConfig, steps: int,
                  built=None) -> dict:
-    """Profile one (exchange, placement) cell; returns flat metrics.
+    """Profile one (exchange, placement[, schedule]) cell; flat metrics.
 
     `built` optionally passes a prebuilt (spec, plan, state) from
     `engine.build` for the same (cfg, shards, placement): the plan is
     exchange-independent, so callers sweeping exchange modes (the
-    connectivity_sweep suite) skip rebuilding the synapse tables —
-    `spec.eng` is re-pointed at `eng` here."""
+    connectivity_sweep / comm_overlap suites) skip rebuilding the synapse
+    tables — `spec.eng` is re-pointed at `eng` here."""
     if built is None:
         spec, plan, state = engine.build(cfg, eng)
     else:
@@ -120,57 +78,41 @@ def profile_cell(cfg: GridConfig, eng: EngineConfig, steps: int,
         assert (spec.eng.n_shards, spec.eng.placement) == \
             (eng.n_shards, eng.placement), "prebuilt plan layout mismatch"
         spec = spec._replace(eng=eng)
-    phase_a, exchange, phase_b, fused = make_phase_fns(spec, plan)
+    sp = StepProgram.from_parts(spec, plan, state0=state)
+    pp = sp.phase_fns()
 
-    # warmup: compile all three phase functions (t is traced, so one call
-    # covers every step)
-    t0j = jnp.int32(0)
-    st_w, spiked_w, _ = phase_a(plan, state, t0j)
-    ss_w = exchange(plan, spiked_w)
-    jax.block_until_ready(phase_b(plan, st_w, ss_w, t0j))
+    # warmup: compile the phase programs outside the wall-clock window
+    # (t is traced, so one call covers every step; the pipelined split
+    # halves compile in time_phases' own warm pass, already warm here)
+    st_w, spiked_w, _ = pp.phase_a(state, 0)
+    ss_w = pp.exchange(spiked_w)
+    jax.block_until_ready(pp.phase_b(st_w, ss_w, 0))
+    if spec.eng.exchange_schedule == "pipelined":
+        st_w, spiked_w, _ = pp.phase_a_dynamics(state, 0)
+        jax.block_until_ready(pp.phase_a_plasticity(st_w, spiked_w, 0))
 
-    times = dict(phase_a_s=0.0, exchange_s=0.0, phase_b_s=0.0)
-    spikes = arrivals = 0
-    rasters = []
-    s = state
     wall0 = time.perf_counter()
-    for t in range(steps):
-        tt = jnp.int32(t)
-        t0 = time.perf_counter()
-        s2, spiked, tm = phase_a(plan, s, tt)
-        jax.block_until_ready(spiked)
-        times["phase_a_s"] += time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        spiked_src = exchange(plan, spiked)
-        jax.block_until_ready(spiked_src)
-        times["exchange_s"] += time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        s = phase_b(plan, s2, spiked_src, tt)
-        jax.block_until_ready(s.arr_ring)
-        times["phase_b_s"] += time.perf_counter() - t0
-
-        spikes += int(np.asarray(tm.spikes).sum())
-        arrivals += int(np.asarray(tm.arrivals).sum())
-        rasters.append(np.asarray(spiked))
+    _, times, rasters, counts = sp.time_phases(state, 0, steps,
+                                               collect_rasters=True)
     wall_s = time.perf_counter() - wall0
 
     raster = np.stack(rasters)                       # [T, H, N]
     sig = observables.raster_signature(raster, np.asarray(plan.gid))
     rate = observables.mean_rate_hz(raster, cfg.n_neurons)
-    hlo_flops, hlo_bytes = _hlo_step_cost(fused, plan, state)
+    hlo_flops, hlo_bytes = _hlo_step_cost(sp, state)
 
     phases_sum = sum(times.values())
     return dict(
         exchange=eng.exchange, placement=eng.placement, steps=steps,
+        exchange_schedule=eng.exchange_schedule,
         **{k: round(v, 4) for k, v in times.items()},
         phases_sum_s=round(phases_sum, 4), wall_s=round(wall_s, 4),
         steps_per_s=round(steps / wall_s, 2) if wall_s else 0.0,
         comm_fraction=round(times["exchange_s"] / phases_sum, 4)
         if phases_sum else 0.0,
-        spikes=spikes, arrivals=arrivals, raster_sig=sig.hex(),
-        rate_hz=round(rate, 2), hlo_flops=hlo_flops, hlo_bytes=hlo_bytes)
+        spikes=counts["spikes"], arrivals=counts["arrivals"],
+        raster_sig=sig.hex(), rate_hz=round(rate, 2),
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes)
 
 
 def run_profile(quick: bool = False) -> dict:

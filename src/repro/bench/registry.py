@@ -39,6 +39,11 @@ def _event_vs_dense(quick):
     return event_vs_dense.run_suite(quick)
 
 
+def _comm_overlap(quick):
+    from .suites import comm_overlap
+    return comm_overlap.run_suite(quick)
+
+
 def _lm_throughput(quick):
     from .suites import lm_throughput
     return lm_throughput.run_suite(quick)
@@ -74,6 +79,9 @@ BENCHES: Dict[str, Entry] = {e.name: e for e in [
           "H=1 compute/communication split (paper Table 2, legacy view)"),
     Entry("event_vs_dense", _event_vs_dense,
           "dense O(E) vs event-driven delivery crossover (beyond-paper)"),
+    Entry("comm_overlap", _comm_overlap,
+          "hidden vs exposed spike-exchange time, sync vs pipelined "
+          "schedule x profile x H (comm/compute overlap)"),
     Entry("connectivity_sweep", _connectivity_sweep,
           "per-phase split across lateral-connectivity profiles "
           "(ring/Gaussian/exponential; arXiv:1803.08833)"),

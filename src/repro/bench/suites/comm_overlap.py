@@ -1,0 +1,143 @@
+"""Comm/compute overlap: hidden vs exposed spike-exchange time.
+
+The paper keeps communication under ~10% of wall-clock by overlapping the
+AER spike exchange with computation wherever the delay structure allows.
+This suite measures exactly that trade for the JAX engine: every cell
+runs the SAME physics under both exchange schedules —
+
+  sync       exchange fenced between phase A and phase B; exchange_s is
+             the wire's full exposed latency,
+  pipelined  exchange dispatched between the two phase-A halves and only
+             awaited right before the phase B that consumes it (one step
+             later); exchange_s records just dispatch + residual wait —
+             the exposed remainder after hiding behind the LTP half
+
+— across lateral-connectivity profiles (the reach sets how much wire
+there is to hide) and shard counts, timed by `StepProgram.time_phases`
+(the identical discipline the cluster worker uses, so these numbers and
+the multi-process ones are directly comparable).
+
+Two invariants are gated in-suite, mirroring the ISSUE's acceptance
+criteria: (a) both schedules produce bit-identical rasters in every cell
+(a schedule is an execution layout, never physics), and (b) on profiles
+with reach >= 3 — where the halo carries at least the paper's 3-ring
+neighbourhood — the pipelined exposed exchange time is strictly below
+the sync baseline.  Cells needing more devices than the platform offers
+are skipped and the executed H list is recorded in config (CI forces 8
+host devices, so the committed baseline carries the full matrix).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from repro.core import EngineConfig, GridConfig, StepProgram, observables
+from repro.core import distributed as dcore
+from repro.core import engine as E
+from repro.core import profiles as profmod
+from .. import report as R
+
+# (key, profile spec): keys are report-safe names, specs feed GridConfig
+PROFILES = (("ring1", "ring1"),
+            ("ring3", "ring3"),
+            ("gauss5", "gaussian:sigma=1.5"))
+SCHEDULES = ("sync", "pipelined")
+H_LIST = (2, 4)
+
+
+def _cell(spec, plan, state, mesh, steps: int, reps: int) -> dict:
+    """One (profile, H, schedule) cell: per-phase walls are the per-key
+    MINIMUM over `reps` timing passes (the programs are compiled once and
+    the state is re-seeded each pass, so reps differ only by scheduler
+    noise — min is the standard de-noised estimate and what makes the
+    strict hidden<exposed gate safe on shared runners)."""
+    sp = StepProgram.from_parts(spec, plan, mesh=mesh)
+    s = sp.place(state)
+    times = rasters = counts = None
+    for _ in range(reps):
+        _, t1, rasters, counts = sp.time_phases(s, 0, steps,
+                                                collect_rasters=True)
+        times = t1 if times is None else \
+            {k: min(v, t1[k]) for k, v in times.items()}
+    raster = np.stack(rasters)                          # [T, H, N]
+    sig = observables.raster_signature(raster, np.asarray(plan.gid))
+    phases_sum = sum(times.values())
+    return dict(**{k: round(v, 4) for k, v in times.items()},
+                phases_sum_s=round(phases_sum, 4),
+                exposed_fraction=round(times["exchange_s"] / phases_sum, 4)
+                if phases_sum else 0.0,
+                spikes=counts["spikes"], raster_sig=sig.hex())
+
+
+def run_suite(quick: bool = False) -> dict:
+    npc = 80 if quick else 200
+    steps = 40 if quick else 100
+    reps = 3
+    h_list = [h for h in H_LIST if h <= jax.device_count()]
+
+    cells, pairs = {}, {}
+    for pkey, pspec in PROFILES:
+        reach = profmod.parse(pspec).reach()
+        cfg = GridConfig(grid_x=4, grid_y=2, neurons_per_column=npc,
+                         synapses_per_neuron=50, seed=5,
+                         connectivity=pspec)
+        for H in h_list:
+            # one build per (profile, H): the plan is schedule-independent
+            eng0 = EngineConfig(n_shards=H, exchange="halo")
+            spec, plan, state = E.build(cfg, eng0)
+            mesh = dcore.make_mesh(H)
+            by_sched = {}
+            for sched in SCHEDULES:
+                eng = dataclasses.replace(eng0, exchange_schedule=sched)
+                cell = _cell(spec._replace(eng=eng), plan, state, mesh,
+                             steps, reps)
+                key = f"{pkey}_h{H}_{sched}"
+                cells[key] = dict(profile=pspec, reach=reach, h=H,
+                                  schedule=sched, steps=steps, **cell)
+                by_sched[sched] = cell
+                print("[comm_overlap]", key, json.dumps(cells[key]),
+                      flush=True)
+
+            sy, pi = by_sched["sync"], by_sched["pipelined"]
+            if sy["raster_sig"] != pi["raster_sig"]:
+                raise RuntimeError(
+                    f"schedule changed the physics at {pkey} H={H}: "
+                    f"sync {sy['raster_sig'][:16]} != pipelined "
+                    f"{pi['raster_sig'][:16]}")
+            if reach >= 3 and pi["exchange_s"] >= sy["exchange_s"]:
+                raise RuntimeError(
+                    f"pipelined exchange not hidden at {pkey} (reach "
+                    f"{reach}) H={H}: exposed {pi['exchange_s']}s >= sync "
+                    f"{sy['exchange_s']}s")
+            pairs[f"{pkey}_h{H}"] = dict(
+                profile=pspec, reach=reach, h=H,
+                sync_exchange_s=sy["exchange_s"],
+                pipelined_exchange_s=pi["exchange_s"],
+                hidden_s=round(sy["exchange_s"] - pi["exchange_s"], 4),
+                hidden_fraction=round(
+                    1.0 - pi["exchange_s"] / sy["exchange_s"], 4)
+                if sy["exchange_s"] else 0.0)
+
+    deterministic, wall = {}, {}
+    for pair_key, p in pairs.items():
+        deterministic[f"sig_{pair_key}"] = \
+            cells[f"{pair_key}_sync"]["raster_sig"]
+        deterministic[f"spikes_{pair_key}"] = \
+            cells[f"{pair_key}_sync"]["spikes"]
+        wall[f"{pair_key}_hidden_fraction"] = p["hidden_fraction"]
+    for key, c in cells.items():
+        for m in ("phase_a_s", "exchange_s", "phase_b_s",
+                  "exposed_fraction"):
+            wall[f"{key}_{m}"] = c[m]
+
+    config = dict(quick=quick, h_list=list(h_list), grid="4x2",
+                  neurons_per_column=npc, steps=steps, exchange="halo",
+                  profiles=[p for _, p in PROFILES])
+    return R.make_report(
+        "comm_overlap", config, deterministic, wall,
+        extra=dict(cells=[dict(cell=k, **c) for k, c in sorted(
+            cells.items())],
+            overlap=[dict(pair=k, **p) for k, p in sorted(pairs.items())]))

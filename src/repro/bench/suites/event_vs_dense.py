@@ -12,7 +12,7 @@ measurement families:
 
   - distributed cells (H x exchange x delivery, real `shard_map` over a
     `cells` mesh): per-phase A / exchange / B walls via
-    `core.distributed.make_phase_fns` — the paper's Table 2 split — so
+    `core.StepProgram.time_phases` — the paper's Table 2 split — so
     the crossover is measured under real sharding, where phase A is the
     event backend's O(spikes x fan) advantage and the exchange wire is
     shared by both backends.  Every cell must produce the same raster
@@ -36,7 +36,7 @@ import json
 import jax
 import numpy as np
 
-from repro.core import EngineConfig, GridConfig, observables
+from repro.core import EngineConfig, GridConfig, StepProgram, observables
 from repro.core import distributed as dcore
 from repro.core import engine as E
 from repro.core import event_engine as EV
@@ -92,12 +92,11 @@ def bench(quick: bool = False):
 def _phase_cell(spec, plan, state, mesh, steps: int, eplan=None,
                 caps=None) -> dict:
     """Per-phase walls of one distributed cell under real shard_map.
-    Warmup + timing discipline live in `distributed.time_phases` (shared
+    Warmup + timing discipline live in `StepProgram.time_phases` (shared
     with the cluster worker, so the two measurements cannot drift)."""
-    phase_fns = dcore.make_phase_fns(spec, plan, mesh, eplan=eplan,
-                                     caps=caps)
-    s = dcore.shard_put(mesh, state)
-    s, times, rasters = dcore.time_phases(phase_fns, s, 0, steps,
+    sp = StepProgram.from_parts(spec, plan, eplan, mesh=mesh, caps=caps)
+    s = sp.place(state)
+    s, times, rasters, _ = sp.time_phases(s, 0, steps,
                                           collect_rasters=True)
     raster = np.stack(rasters)                         # [T, H, N]
     sig = observables.raster_signature(raster, np.asarray(plan.gid))

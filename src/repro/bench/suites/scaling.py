@@ -18,20 +18,19 @@ from ..subproc import run_subprocess
 
 _POINT = """
 import time, numpy as np, jax
-from repro.core import EngineConfig, GridConfig, build, observables
+from repro.core import EngineConfig, GridConfig, StepProgram, observables
 from repro.core import distributed as D
 
 H = {H}
 cfg = GridConfig(grid_x={gx}, grid_y={gy}, neurons_per_column={npc})
 eng = EngineConfig(n_shards=H, exchange={exchange!r})
-spec, plan, state = build(cfg, eng)
-mesh = D.make_mesh(H)
-state = D.shard_put(mesh, state)
-runner = D.make_sharded_run(spec, plan, mesh)
-s2, raster, tm = runner(state, 0, {steps})       # compile
+sp = StepProgram(cfg, eng, mesh=D.make_mesh(H))
+plan = sp.plan
+state = sp.place(sp.init_state())
+s2, raster, tm = sp.run(state, 0, {steps})       # compile
 jax.block_until_ready(raster)
 t0 = time.time()
-s2, raster, tm = runner(state, 0, {steps})
+s2, raster, tm = sp.run(state, 0, {steps})
 jax.block_until_ready(raster)
 wall = time.time() - t0
 raster = np.asarray(raster)

@@ -32,13 +32,17 @@ def workload_namespace(**kw):
 
 def run_point(args, nprocs: int, timeout: float = 900.0) -> dict:
     """Launch one `nprocs`-process run of the workload in `args`; returns
-    the aggregated scaling row."""
+    the aggregated scaling row.  `args.tuned_env` (the `--tuned-env`
+    flag) launches the workers under the tcmalloc/XLA host-tuning preset
+    (`_flags.tuned_host_env`); the workers record it in their result
+    JSON so A/B rows stay distinguishable."""
     H = args.shards
     if H % nprocs != 0:
         raise ValueError(f"shards {H} not divisible by nprocs {nprocs}")
     cmd = ["-m", "repro.cluster.worker", *cworker.workload_argv(args)]
     outputs = local.launch(cmd, nprocs=nprocs,
-                           devices_per_proc=H // nprocs, timeout=timeout)
+                           devices_per_proc=H // nprocs, timeout=timeout,
+                           tuned_env=getattr(args, "tuned_env", False))
     return crep.summarize_point(crep.parse_worker_outputs(outputs))
 
 
@@ -49,8 +53,7 @@ def reference_signature(args) -> str:
     dispatches on the workload's delivery backend like the workers do."""
     import numpy as np
 
-    from ..core import (EngineConfig, GridConfig, build_delivery,
-                        checkpoint, observables, run_delivery)
+    from ..core import EngineConfig, GridConfig, StepProgram, observables
 
     gx, gy = (int(v) for v in args.grid.split("x"))
     cfg = GridConfig(grid_x=gx, grid_y=gy,
@@ -60,13 +63,13 @@ def reference_signature(args) -> str:
     eng = EngineConfig(n_shards=args.shards, exchange=args.exchange,
                        placement=args.placement,
                        delivery=getattr(args, "delivery", "dense"))
-    spec, plan, eplan, state, cap_ev = build_delivery(cfg, eng)
-    t0 = 0
+    sp = StepProgram(cfg, eng)
+    state, t0 = sp.init_state(), 0
     if getattr(args, "ckpt", None):
-        state, t0 = checkpoint.load(args.ckpt, spec, plan, cap_ev=cap_ev)
-    _, raster, _ = run_delivery(spec, plan, eplan, state, t0, args.steps)
+        state, t0 = sp.load(args.ckpt)
+    _, raster, _ = sp.run(state, t0, args.steps)
     return observables.raster_signature(np.asarray(raster),
-                                        np.asarray(plan.gid)).hex()
+                                        np.asarray(sp.plan.gid)).hex()
 
 
 def cmd_run(args) -> int:
@@ -95,7 +98,8 @@ def cmd_run(args) -> int:
 
 def sweep_report(quick: bool = False, nprocs_list=None, out: str = None,
                  timeout: float = 900.0, profile: str = "ring3",
-                 delivery: str = "dense") -> dict:
+                 delivery: str = "dense", exchange_schedule: str = "sync",
+                 tuned_env: bool = False) -> dict:
     """Run the strong-scaling sweep; returns (and optionally writes) the
     BENCH report.  Total shards H = max process count, so the 1-process
     point runs H local shards and the P-process point H/P each — the
@@ -114,7 +118,9 @@ def sweep_report(quick: bool = False, nprocs_list=None, out: str = None,
         phase_steps=15 if quick else 40,
         shards=max(nprocs_list),
         profile=profile,
-        delivery=delivery)
+        delivery=delivery,
+        exchange_schedule=exchange_schedule,
+        tuned_env=tuned_env)
     rows = []
     for p in nprocs_list:
         row = run_point(args, p, timeout=timeout)
@@ -131,7 +137,9 @@ def sweep_report(quick: bool = False, nprocs_list=None, out: str = None,
                   synapses=args.synapses, steps=args.steps,
                   phase_steps=args.phase_steps, exchange=args.exchange,
                   placement=args.placement, profile=args.profile,
-                  delivery=args.delivery)
+                  delivery=args.delivery,
+                  exchange_schedule=args.exchange_schedule,
+                  tuned_env=tuned_env)
     rep = crep.scaling_report(rows, config)
     if out:
         path = bench_report.save(rep, out)
@@ -151,6 +159,10 @@ def main(argv=None) -> int:
     rp.add_argument("--timeout", type=float, default=900.0)
     rp.add_argument("--no-verify", dest="verify", action="store_false",
                     help="skip the single-process bit-identity check")
+    rp.add_argument("--tuned-env", action="store_true",
+                    help="launch workers under the tcmalloc/XLA host-"
+                         "tuning preset (_flags.tuned_host_env); recorded "
+                         "in the result JSON for A/B comparison")
 
     sp = sub.add_parser("sweep", help="strong scaling over process counts")
     sp.add_argument("--nprocs-list", default="1,2",
@@ -167,6 +179,12 @@ def main(argv=None) -> int:
     sp.add_argument("--delivery", default="dense",
                     choices=["dense", "event"],
                     help="synaptic delivery backend for every sweep point")
+    sp.add_argument("--exchange-schedule", default="sync",
+                    choices=["sync", "pipelined"],
+                    help="exchange issue order for every sweep point")
+    sp.add_argument("--tuned-env", action="store_true",
+                    help="launch workers under the tcmalloc/XLA host-"
+                         "tuning preset")
 
     args = ap.parse_args(argv)
     if args.cmd == "run":
@@ -174,7 +192,9 @@ def main(argv=None) -> int:
     nprocs_list = [int(v) for v in args.nprocs_list.split(",") if v]
     sweep_report(quick=args.quick, nprocs_list=nprocs_list, out=args.out,
                  timeout=args.timeout, profile=args.profile,
-                 delivery=args.delivery)
+                 delivery=args.delivery,
+                 exchange_schedule=args.exchange_schedule,
+                 tuned_env=args.tuned_env)
     return 0
 
 

@@ -79,14 +79,17 @@ def _reap(procs) -> None:
 
 def launch(cmd: Sequence[str], nprocs: int, devices_per_proc: int = 1,
            timeout: float = 900.0, port: Optional[int] = None,
-           extra_env: Optional[dict] = None, echo: bool = False
-           ) -> List[str]:
+           extra_env: Optional[dict] = None, echo: bool = False,
+           tuned_env: bool = False) -> List[str]:
     """Run `cmd` (argv after the interpreter, e.g. `["-m",
     "repro.cluster.worker", ...]`) as `nprocs` coordinated processes.
 
     Returns the per-process merged stdout/stderr once all exit 0.  On any
     nonzero exit or timeout, every surviving worker is reaped and a
     `LaunchError` carries the per-process exit codes and output tails.
+    `tuned_env=True` launches every worker under the tcmalloc/logging
+    host-tuning preset (`_flags.tuned_host_env`; numerics-neutral by
+    construction, marked via REPRO_TUNED_ENV in the worker result).
     """
     if nprocs < 1:
         raise ValueError(f"nprocs must be >= 1, got {nprocs}")
@@ -95,7 +98,8 @@ def launch(cmd: Sequence[str], nprocs: int, devices_per_proc: int = 1,
     try:
         for pid in range(nprocs):
             env = cluster_env(devices_per_proc, SRC, coordinator=coordinator,
-                              num_processes=nprocs, process_id=pid)
+                              num_processes=nprocs, process_id=pid,
+                              tuned=tuned_env)
             env.update(extra_env or {})
             f = tempfile.TemporaryFile(mode="w+", encoding="utf-8",
                                        errors="replace")

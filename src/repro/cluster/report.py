@@ -59,6 +59,9 @@ def summarize_point(results: List[dict]) -> dict:
                placement=results[0]["placement"],
                delivery=results[0].get("delivery", "dense"),
                profile=results[0].get("profile", "ring3"),
+               exchange_schedule=results[0].get("exchange_schedule",
+                                                "sync"),
+               tuned_env=results[0].get("tuned_env", False),
                wall_s=max(r["wall_s"] for r in results),
                spikes=results[0]["spikes"],
                rate_hz=results[0]["rate_hz"],

@@ -6,11 +6,12 @@ Every process builds the full plan locally (construction is a pure
 function of the config — the paper's reproducible-construction property),
 places its own shards on the process-spanning `cells` mesh, and runs:
 
-  1. the fused engine (`core.distributed.make_sharded_run`) — timed
-     end-to-end, raster gathered to every host for the global signature;
-  2. optionally a phase-split loop (`make_phase_fns`) attributing
-     wall-clock to phase A / exchange / phase B *per process* — the
-     paper's Table 2 instrumentation, now across real processes.
+  1. the fused engine (`core.StepProgram.run`) — timed end-to-end,
+     raster gathered to every host for the global signature;
+  2. optionally a phase-split loop (`StepProgram.time_phases`)
+     attributing wall-clock to phase A / exchange / phase B *per
+     process* — the paper's Table 2 instrumentation, now across real
+     processes, schedule-aware under `--exchange-schedule pipelined`.
 
 The result is one `CLUSTER_RESULT {json}` line on stdout per process;
 `repro.cluster.report` parses and aggregates them in the parent.
@@ -35,7 +36,11 @@ def add_workload_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--shards", type=int, default=2,
                     help="total shards H across ALL processes")
     ap.add_argument("--exchange", default="allgather",
-                    choices=["allgather", "halo"])
+                    choices=["allgather", "halo", "hier"])
+    ap.add_argument("--exchange-schedule", default="sync",
+                    choices=["sync", "pipelined"],
+                    help="'pipelined' overlaps the spike exchange with "
+                         "phase A's LTP half (bit-identical outputs)")
     ap.add_argument("--placement", default="block",
                     choices=["block", "scatter"])
     ap.add_argument("--delivery", default="dense",
@@ -63,6 +68,8 @@ def workload_argv(args) -> list:
             "--steps", str(args.steps),
             "--shards", str(args.shards),
             "--exchange", args.exchange,
+            "--exchange-schedule", getattr(args, "exchange_schedule",
+                                           "sync"),
             "--placement", args.placement,
             "--delivery", getattr(args, "delivery", "dense"),
             "--profile", args.profile,
@@ -81,14 +88,13 @@ def main(argv=None) -> int:
     from . import runtime
     runtime.ensure_initialized()
 
+    import os
+
     import jax
     import numpy as np
 
-    from ..core import (EngineConfig, GridConfig, build_delivery,
-                        checkpoint, observables)
-    from ..core import distributed as D
+    from ..core import EngineConfig, GridConfig, StepProgram, observables
     from ..dist import mesh as dist_mesh
-    from ..dist import sharding as dist_sharding
 
     H = args.shards
     if jax.device_count() != H:
@@ -102,31 +108,32 @@ def main(argv=None) -> int:
                      synapses_per_neuron=args.synapses, seed=args.seed,
                      connectivity=args.profile)
     eng = EngineConfig(n_shards=H, exchange=args.exchange,
+                       exchange_schedule=args.exchange_schedule,
                        placement=args.placement, delivery=args.delivery)
     event = args.delivery == "event"
-    spec, plan, eplan, state, cap_ev = build_delivery(cfg, eng)
-    t0 = 0
+    sp = StepProgram(cfg, eng, mesh=dist_mesh.make_snn_mesh(H))
+    state, t0 = sp.init_state(), 0
     if args.ckpt:
-        state, t0 = checkpoint.load(args.ckpt, spec, plan, cap_ev=cap_ev)
+        state, t0 = sp.load(args.ckpt)
 
-    mesh = dist_mesh.make_snn_mesh(H)
-    state_d = dist_sharding.shard_put(mesh, state, "cells")
-    runner = D.make_sharded_run(spec, plan, mesh, eplan=eplan)
+    state_d = sp.place(state)
 
     # fused run: warmup (compile), then timed from the same initial state
-    jax.block_until_ready(runner(state_d, t0, args.steps)[1])
+    jax.block_until_ready(sp.run(state_d, t0, args.steps)[1])
     w0 = time.perf_counter()
-    state_f, raster, _ = runner(state_d, t0, args.steps)
+    state_f, raster, _ = sp.run(state_d, t0, args.steps)
     jax.block_until_ready(raster)
     wall_s = time.perf_counter() - w0
 
     raster_np = runtime.gather(raster)                    # [T, H, N]
-    gid_np = np.asarray(plan.gid)
+    gid_np = np.asarray(sp.plan.gid)
     result = dict(
         proc=runtime.process_index(), nprocs=runtime.process_count(),
         shards=H, t0=t0, steps=args.steps,
         exchange=args.exchange, placement=args.placement,
+        exchange_schedule=args.exchange_schedule,
         delivery=args.delivery, profile=args.profile,
+        tuned_env=os.environ.get("REPRO_TUNED_ENV", "") == "1",
         local_devices=jax.local_device_count(),
         wall_s=round(wall_s, 4),
         spikes=int(raster_np.sum()),
@@ -137,12 +144,11 @@ def main(argv=None) -> int:
             runtime.gather(state_f.sat)).sum())
 
     if args.phase_steps > 0:
-        phase_fns = D.make_phase_fns(spec, plan, mesh, eplan=eplan)
-        # runner never mutates its input state, so state_d re-seeds the
-        # split loop; warmup + per-phase blocking live in time_phases
-        # (shared with the event_vs_dense bench suite)
-        _, times, _ = D.time_phases(phase_fns, state_d, t0,
-                                    args.phase_steps)
+        # sp.run never mutates its input state, so state_d re-seeds the
+        # split loop; warmup + per-phase blocking + the schedule-aware
+        # exchange fencing live in StepProgram.time_phases (shared with
+        # the bench suites)
+        _, times, _, _ = sp.time_phases(state_d, t0, args.phase_steps)
         result["phase_steps"] = args.phase_steps
         result.update({k: round(v, 4) for k, v in times.items()})
 

@@ -7,40 +7,42 @@ from .engine import (ShardPlan, ShardState, SimSpec, build, init_state,
                      make_step_fn, run)
 from . import (aer, checkpoint, connectivity, distributed, observables,
                profiles, stimulus, topology)
+from .step_program import StepProgram
+
+
+def _warn_deprecated(old: str) -> None:
+    import warnings
+    warnings.warn(
+        f"core.{old} is deprecated; construct a core.StepProgram — its "
+        f"spec/plan/eplan/init_state()/cap_ev and .run handle replace the "
+        f"build_delivery/run_delivery pair for both backends",
+        DeprecationWarning, stacklevel=3)
 
 
 def build_delivery(cfg, eng, izh=None, stdp=None):
-    """Backend-generic build, dispatching on `eng.delivery`.
+    """Deprecated: use `core.StepProgram(cfg, eng)`.
 
-    Returns (spec, plan, eplan, state, cap_ev): for the dense backend
-    eplan/cap_ev are None and state is a ShardState; for the event
-    backend they are the EventPlan and ring capacity, state an
-    EventState.  `cap_ev` is exactly what `checkpoint.load` needs, so
-    callers stay delivery-agnostic end to end (launch/snn, cluster
-    worker/cli all build through here)."""
-    from .params import DEFAULT_IZH, DEFAULT_STDP
-    izh, stdp = izh or DEFAULT_IZH, stdp or DEFAULT_STDP
-    if eng.delivery == "event":
-        from . import event_engine
-        spec, plan, eplan, state = event_engine.build(cfg, eng, izh, stdp)
-        return spec, plan, eplan, state, state.ev_ring.shape[-1]
-    spec, plan, state = build(cfg, eng, izh, stdp)
-    return spec, plan, None, state, None
+    Returns the legacy (spec, plan, eplan, state, cap_ev) tuple by
+    delegating to StepProgram (dense: eplan/cap_ev are None and state a
+    ShardState; event: the EventPlan, ring capacity, an EventState)."""
+    _warn_deprecated("build_delivery")
+    sp = StepProgram(cfg, eng, izh=izh, stdp=stdp)
+    return sp.spec, sp.plan, sp.eplan, sp.init_state(), sp.cap_ev
 
 
 def run_delivery(spec, plan, eplan, state, t0, n_steps):
-    """Backend-generic single-device driver: (state, raster, timings) via
-    `engine.run` or `event_engine.run` depending on `eplan`."""
-    if eplan is not None:
-        from . import event_engine
-        return event_engine.run(spec, plan, eplan, state, t0, n_steps)
-    return run(spec, plan, state, t0, n_steps)
+    """Deprecated: use `core.StepProgram(...).run` (or
+    `StepProgram.from_parts(spec, plan, eplan).run`).  Backend-generic
+    single-device driver: (state, raster, timings)."""
+    _warn_deprecated("run_delivery")
+    return StepProgram.from_parts(spec, plan, eplan).run(state, t0,
+                                                         n_steps)
 
 
 __all__ = [
     "EngineConfig", "GridConfig", "IzhikevichParams", "StdpParams",
     "DEFAULT_IZH", "DEFAULT_STDP", "ShardPlan", "ShardState", "SimSpec",
-    "build", "build_delivery", "init_state", "make_step_fn", "run",
-    "run_delivery", "aer", "checkpoint", "connectivity", "distributed",
-    "observables", "profiles", "stimulus", "topology",
+    "StepProgram", "build", "build_delivery", "init_state", "make_step_fn",
+    "run", "run_delivery", "aer", "checkpoint", "connectivity",
+    "distributed", "observables", "profiles", "stimulus", "topology",
 ]

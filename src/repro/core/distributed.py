@@ -18,6 +18,30 @@ Spike exchange modes (EngineConfig.exchange):
       spikes), while wire bytes are static — the SPMD trade documented in
       DESIGN.md §2.
 
+  'hier' — two-level hierarchy matching the paper's cluster topology:
+      level 1 is an intra-process `all_gather` restricted (via
+      axis_index_groups) to the shards one OS process owns — shared-memory
+      traffic, never crossing the NIC; level 2 AER-packs the whole group's
+      spikes once and `ppermute`s the group buffer only along the *static
+      group-stride* set the connectivity reaches (hier_offsets — the halo
+      discovery re-run at process granularity).  Inter-process messages
+      therefore go only to neighbouring processes, like the paper's
+      subset-of-processes delivery, however many shards each process runs.
+
+Exchange schedules (EngineConfig.exchange_schedule) — orthogonal to both:
+
+  'sync'      — phase A -> exchange -> phase B in program order.
+  'pipelined' — the exchange for step t is issued right after the
+      dynamics half of phase A(t) (which produces the spike mask) and its
+      result is consumed by a phase B(t) deferred into the NEXT loop
+      iteration, double-buffered through the scan carry.  The collective
+      therefore overlaps the LTP half of phase A plus the loop turnaround
+      instead of exposing its full latency.  The per-step op sequence —
+      B(t-1); A_dyn(t); X(t); A_plast(t) — is a rotation of the sync
+      sequence with identical dataflow (A_plast writes {w, last_post},
+      B writes the arrival rings; disjoint), so rasters AND weights are
+      bit-identical to 'sync' (DESIGN.md §Pipelined exchange).
+
 Delivery modes (EngineConfig.delivery) — orthogonal to the exchange:
 
   'dense' — O(E) masked delivery (`engine.phase_a/phase_b`).
@@ -32,8 +56,8 @@ Delivery modes (EngineConfig.delivery) — orthogonal to the exchange:
 """
 from __future__ import annotations
 
-import time
-from typing import List, Optional
+import warnings
+from typing import Callable, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -109,16 +133,119 @@ def _spiked_src_halo(spec, offsets, plan, spiked):
         & (plan.src_gid >= 0)
 
 
-def _make_exchange(spec: SimSpec, plan: ShardPlan):
+def mesh_shard_groups(mesh: Mesh, n_shards: int) -> List[List[int]]:
+    """Contiguous per-process shard groups of the `cells` axis.
+
+    `jax.devices()` orders devices process-major, so a process's shards
+    are a contiguous block of the axis; the hierarchical exchange needs
+    that (and equal block sizes, an `axis_index_groups` requirement), so
+    both are verified rather than assumed."""
+    devs = list(mesh.devices.reshape(-1))[:n_shards]
+    procs = [d.process_index for d in devs]
+    groups: List[List[int]] = [[0]]
+    for i in range(1, n_shards):
+        if procs[i] == procs[i - 1]:
+            groups[-1].append(i)
+        else:
+            groups.append([i])
+    if len(groups) != len(set(procs)):
+        raise ValueError(
+            f"hier exchange needs contiguous per-process device blocks on "
+            f"the cells axis; got process layout {procs}")
+    if len({len(g) for g in groups}) != 1:
+        raise ValueError(
+            f"hier exchange needs equal shards per process; got "
+            f"{[len(g) for g in groups]}")
+    return groups
+
+
+def hier_offsets(spec: SimSpec, plan: ShardPlan, group_size: int
+                 ) -> List[int]:
+    """`halo_offsets` at PROCESS-GROUP granularity: the static set of
+    group strides the connectivity reaches.  Derived from the same source
+    tables (provisioned from the profile's `reach()`), so a narrow kernel
+    shrinks the inter-process neighbourhood and a wide one grows it."""
+    H = spec.eng.n_shards
+    G = H // group_size
+    src_gid = np.asarray(plan.src_gid)
+    offs = set()
+    for h in range(H):
+        s = src_gid[h]
+        s = s[s >= 0]
+        owners = np.unique(topology.owner_of(spec.cfg, s, H,
+                                             spec.eng.placement))
+        for o in owners.tolist():
+            offs.add((h // group_size - o // group_size) % G)
+    return sorted(offs)
+
+
+def _spiked_src_hier(spec, groups, g_offsets, gid_all, plan, spiked):
+    """Two-level exchange: intra-group all_gather, inter-group AER.
+
+    Level 1 gathers the group's [L, N] spike block over shared memory
+    (axis_index_groups keeps the collective inside one process).  Level 2
+    packs ONE AER buffer for the whole group and ppermutes it at whole-
+    group stride, so each inter-process message carries a process's full
+    spike set and only neighbouring processes ever exchange bytes.
+    Delivered mask == the allgather wire's, bit-for-bit."""
+    H = spec.eng.n_shards
+    L = len(groups[0])
+    spk_grp = jax.lax.all_gather(spiked, "cells",
+                                 axis_index_groups=groups)       # [L, N]
+    g = jax.lax.axis_index("cells") // L
+    gid_grp = jax.lax.dynamic_slice_in_dim(gid_all, g * L, L, axis=0)
+    ids, _count = aer.pack(spk_grp.reshape(-1), gid_grp.reshape(-1),
+                           gid_grp.size)
+    received = [ids]                                  # own group (stride 0)
+    for d in g_offsets:
+        if d == 0:
+            continue
+        perm = [(i, (i + d * L) % H) for i in range(H)]
+        received.append(jax.lax.ppermute(ids, "cells", perm=perm))
+    all_ids = jnp.concatenate(received)
+    mask = jnp.zeros((spec.n_total,), bool).at[all_ids].set(
+        True, mode="drop")
+    return mask.at[plan.src_gid].get(mode="fill", fill_value=False) \
+        & (plan.src_gid >= 0)
+
+
+def _resolve_groups(spec: SimSpec, mesh: Optional[Mesh],
+                    hier_groups) -> List[List[int]]:
+    """Shard groups for the 'hier' exchange: an explicit group count (for
+    single-process emulation/tests), an explicit group list, or — the
+    production path — the mesh's per-process device blocks."""
+    H = spec.eng.n_shards
+    if hier_groups is None:
+        if mesh is None:
+            raise ValueError("exchange='hier' needs a mesh (to derive "
+                             "per-process groups) or hier_groups=")
+        return mesh_shard_groups(mesh, H)
+    if isinstance(hier_groups, int):
+        G = hier_groups
+        if G <= 0 or H % G:
+            raise ValueError(f"hier_groups={G} must divide n_shards={H}")
+        L = H // G
+        return [list(range(g * L, (g + 1) * L)) for g in range(G)]
+    return [list(g) for g in hier_groups]
+
+
+def _make_exchange(spec: SimSpec, plan: ShardPlan,
+                   groups: Optional[Sequence[Sequence[int]]] = None):
     """Per-shard exchange callable (plan_1, spiked_1) -> spiked_src_1.
 
-    Closes over host-side statics only (halo offsets / replicated gid
-    table), so the returned callable is safe inside `shard_map` bodies on
-    process-spanning meshes.  `plan` must be host-addressable."""
+    Closes over host-side statics only (halo/group offsets / replicated
+    gid table), so the returned callable is safe inside `shard_map` bodies
+    on process-spanning meshes.  `plan` must be host-addressable."""
     if spec.eng.exchange == "halo":
         offsets = halo_offsets(spec, plan)
         return lambda p1, s1: _spiked_src_halo(spec, offsets, p1, s1)
     gid_all = jnp.asarray(np.asarray(plan.gid))   # replicated [H, N]
+    if spec.eng.exchange == "hier":
+        if groups is None:
+            raise ValueError("exchange='hier': no shard groups resolved")
+        g_offsets = hier_offsets(spec, plan, len(groups[0]))
+        return lambda p1, s1: _spiked_src_hier(spec, groups, g_offsets,
+                                               gid_all, p1, s1)
     return lambda p1, s1: _spiked_src_allgather(spec, gid_all, s1, p1.src_gid)
 
 
@@ -147,11 +274,23 @@ def _plan_tree(spec: SimSpec, plan: ShardPlan, eplan):
     return (plan, eplan)
 
 
-def _delivery_phases(spec: SimSpec, stim_k, caps: Optional[dict] = None):
-    """Per-shard (phase_a, phase_b) callables over the delivery-dependent
-    plan tree.  Both backends share the signature
-    (planT_1, state_1, ...) -> ... with phase_a returning
-    (state', spiked, StepTimings)."""
+class _Phases(NamedTuple):
+    """Per-shard phase callables over the delivery-dependent plan tree.
+
+    `pa` (full phase A) returns (state', spiked, StepTimings); the
+    pipelined schedule uses its split halves `pa_dyn` (same return
+    contract, LTP pending) + `pa_plast` instead — composing them is the
+    definition of `pa`, so both schedules run the same ops."""
+    pa: Callable
+    pb: Callable
+    pa_dyn: Callable
+    pa_plast: Callable
+
+
+def _delivery_phases(spec: SimSpec, stim_k,
+                     caps: Optional[dict] = None) -> _Phases:
+    """Phase callables with the signature (planT_1, state_1, ...) -> ...,
+    dispatched on EngineConfig.delivery; both backends share it."""
     caps = caps or {}
     if _is_event(spec):
         c_post, c_src = caps.get("c_post"), caps.get("c_src")
@@ -165,7 +304,16 @@ def _delivery_phases(spec: SimSpec, stim_k, caps: Optional[dict] = None):
             p, ep = planT
             return event_engine.phase_b(spec, p, ep, st, ss, t, c_src=c_src)
 
-        return pa, pb
+        def pa_dyn(planT, st, t):
+            p, ep = planT
+            return event_engine.phase_a_dynamics(spec, p, ep, st, t, stim_k)
+
+        def pa_plast(planT, st, spiked, t):
+            p, ep = planT
+            return event_engine.phase_a_plasticity(spec, p, ep, st, spiked,
+                                                   t, c_post=c_post)
+
+        return _Phases(pa, pb, pa_dyn, pa_plast)
 
     def pa(planT, st, t):
         return engine.phase_a(spec, planT, st, t, stim_k)
@@ -173,7 +321,13 @@ def _delivery_phases(spec: SimSpec, stim_k, caps: Optional[dict] = None):
     def pb(planT, st, ss, t):
         return engine.phase_b(spec, planT, st, ss, t)
 
-    return pa, pb
+    def pa_dyn(planT, st, t):
+        return engine.phase_a_dynamics(spec, planT, st, t, stim_k)
+
+    def pa_plast(planT, st, spiked, t):
+        return engine.phase_a_plasticity(spec, planT, st, spiked, t)
+
+    return _Phases(pa, pb, pa_dyn, pa_plast)
 
 
 def _specs(spec: SimSpec, planT):
@@ -195,10 +349,22 @@ def _drop_lead(tree):
     return jax.tree.map(lambda x: x[0], tree)
 
 
-def make_sharded_run(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
-                     eplan=None, caps: Optional[dict] = None):
+def _src_false(planT):
+    """All-False spiked_src of the right per-shard width — the pipelined
+    prologue buffer.  Phase B of an all-False mask is an exact no-op for
+    both backends (dense: no hits; event: zero compacted sources, zero
+    ranks, zero saturation), so priming the double buffer with it keeps
+    step t0 bit-identical to the sync schedule."""
+    S = _base_plan(planT).src_gid.shape[0]
+    return jnp.zeros((S,), bool)
+
+
+def make_run_program(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
+                     eplan=None, caps: Optional[dict] = None,
+                     hier_groups=None):
     """Returns run(state, t0, n_steps) -> (state, raster, timings), executing
-    one shard per device of the `cells` mesh axis.
+    one shard per device of the `cells` mesh axis.  (Constructed via
+    `core.StepProgram`; this is the machinery behind its `.run` handle.)
 
     `plan` must be HOST-addressable (the stacked tree `build` returns):
     halo discovery reads it with numpy, and it is then placed on `mesh`
@@ -209,25 +375,52 @@ def make_sharded_run(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
     With spec.eng.delivery == 'event', `eplan` (host-addressable, from
     `event_engine.build`) rides along the same way and `state` must be an
     EventState; `caps` optionally overrides the event compaction
-    capacities (dict with 'c_post'/'c_src' — tests force tiny ones)."""
+    capacities (dict with 'c_post'/'c_src' — tests force tiny ones).
+
+    spec.eng.exchange_schedule selects the loop body: 'sync' is the
+    program-order A -> X -> B step; 'pipelined' rotates it to
+    B(t-1) -> A_dyn(t) -> X(t) -> A_plast(t) with the exchange result
+    double-buffered through the scan carry (all-False prologue, epilogue
+    flush after the scan), so X(t) is issued before the LTP pass it
+    overlaps.  Identical op sequence per step => bit-identical outputs."""
     stim_k = stimulus.stim_key(spec.cfg)
-    exchange = _make_exchange(spec, plan)
+    groups = (_resolve_groups(spec, mesh, hier_groups)
+              if spec.eng.exchange == "hier" else None)
+    exchange = _make_exchange(spec, plan, groups)
     planT = _plan_tree(spec, plan, eplan)
-    pa, pb = _delivery_phases(spec, stim_k, caps)
+    if spec.eng.exchange_schedule not in ("sync", "pipelined"):
+        raise ValueError(
+            f"unknown exchange_schedule {spec.eng.exchange_schedule!r}")
+    ph = _delivery_phases(spec, stim_k, caps)
     pspec, plan_specs, state_specs, tm_specs = _specs(spec, planT)
     plan_d = dist_sharding.shard_put(mesh, planT, "cells")
+    pipelined = spec.eng.exchange_schedule == "pipelined"
 
     def shard_body(plan_s, state_s, ts):
         plan_1 = _drop_lead(plan_s)
         state_1 = _drop_lead(state_s)
 
-        def step(state, t):
-            state, spiked, tm = pa(plan_1, state, t)
+        def step_sync(state, t):
+            state, spiked, tm = ph.pa(plan_1, state, t)
             spiked_src = exchange(_base_plan(plan_1), spiked)
-            state = pb(plan_1, state, spiked_src, t)
+            state = ph.pb(plan_1, state, spiked_src, t)
             return state, (spiked, tm)
 
-        state_1, (raster, tm) = jax.lax.scan(step, state_1, ts)
+        def step_pipelined(carry, t):
+            state, ss_prev = carry
+            state = ph.pb(plan_1, state, ss_prev, t - 1)  # deliver step t-1
+            state, spiked, tm = ph.pa_dyn(plan_1, state, t)
+            ss = exchange(_base_plan(plan_1), spiked)     # issued pre-LTP
+            state = ph.pa_plast(plan_1, state, spiked, t)
+            return (state, ss), (spiked, tm)
+
+        if pipelined:
+            carry0 = (state_1, _src_false(plan_1))
+            (state_1, ss_last), (raster, tm) = jax.lax.scan(
+                step_pipelined, carry0, ts)
+            state_1 = ph.pb(plan_1, state_1, ss_last, ts[-1])  # flush
+        else:
+            state_1, (raster, tm) = jax.lax.scan(step_sync, state_1, ts)
         out_state = jax.tree.map(lambda x: x[None], state_1)
         return (out_state, raster[:, None],
                 jax.tree.map(lambda x: x[:, None], tm))
@@ -248,42 +441,75 @@ def make_sharded_run(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
     return runner
 
 
-def make_phase_fns(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
-                   eplan=None, caps: Optional[dict] = None):
-    """Separately-jitted shard_map'd phases over `mesh`:
+class PhasePrograms(NamedTuple):
+    """Separately-jitted shard_map'd phase handles over one mesh.
 
-        (phase_a(state, t), exchange(spiked), phase_b(state, spiked_src, t))
+    `phase_a(state, t)` / `exchange(spiked)` / `phase_b(state, ss, t)` is
+    the paper's Table 2 split; `phase_a_dynamics(state, t)` and
+    `phase_a_plasticity(state, spiked, t)` are phase A's halves, timed
+    separately under the pipelined schedule (the exchange is dispatched
+    between them).  All five thread the placed plan as a jit argument."""
+    phase_a: Callable
+    exchange: Callable
+    phase_b: Callable
+    phase_a_dynamics: Callable
+    phase_a_plasticity: Callable
 
-    — the real-collective analogue of `bench.profile.make_phase_fns`, used
-    by `repro.cluster` to attribute wall-clock to phase A / spike exchange
-    / phase B per process (paper Table 2, across the process axis).  The
-    placed plan is bound into each returned fn as a jit argument; `plan`
-    must be host-addressable, as in `make_sharded_run`.  Dispatches on
-    spec.eng.delivery exactly like `make_sharded_run` (same `eplan`/`caps`
-    contract), so per-phase walls are comparable across backends."""
+
+def make_phase_programs(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
+                        eplan=None, caps: Optional[dict] = None,
+                        hier_groups=None) -> PhasePrograms:
+    """Separately-jitted shard_map'd phases over `mesh` — the machinery
+    behind `StepProgram.phase_fns` / `.time_phases`, used by
+    `repro.cluster` and the bench suites to attribute wall-clock to
+    phase A / spike exchange / phase B per process (paper Table 2,
+    across the process axis).  The placed plan is bound into each
+    returned fn as a jit argument; `plan` must be host-addressable and
+    `eplan`/`caps` follow the `make_run_program` contract, so per-phase
+    walls are comparable across backends and schedules."""
     stim_k = stimulus.stim_key(spec.cfg)
-    exchange = _make_exchange(spec, plan)
+    groups = (_resolve_groups(spec, mesh, hier_groups)
+              if spec.eng.exchange == "hier" else None)
+    exchange = _make_exchange(spec, plan, groups)
     planT = _plan_tree(spec, plan, eplan)
-    pa, pb = _delivery_phases(spec, stim_k, caps)
+    ph = _delivery_phases(spec, stim_k, caps)
     pspec, plan_specs, state_specs, tm_specs = _specs(spec, planT)
     plan_d = dist_sharding.shard_put(mesh, planT, "cells")
 
     def a_body(plan_s, state_s, t):
-        state_1, spiked, tm = pa(_drop_lead(plan_s), _drop_lead(state_s), t)
+        state_1, spiked, tm = ph.pa(_drop_lead(plan_s),
+                                    _drop_lead(state_s), t)
         return (jax.tree.map(lambda x: x[None], state_1), spiked[None],
                 jax.tree.map(lambda x: x[None], tm))
+
+    def adyn_body(plan_s, state_s, t):
+        state_1, spiked, tm = ph.pa_dyn(_drop_lead(plan_s),
+                                        _drop_lead(state_s), t)
+        return (jax.tree.map(lambda x: x[None], state_1), spiked[None],
+                jax.tree.map(lambda x: x[None], tm))
+
+    def aplast_body(plan_s, state_s, spiked_s, t):
+        state_1 = ph.pa_plast(_drop_lead(plan_s), _drop_lead(state_s),
+                              spiked_s[0], t)
+        return jax.tree.map(lambda x: x[None], state_1)
 
     def ex_body(plan_s, spiked_s):
         return exchange(_base_plan(_drop_lead(plan_s)), spiked_s[0])[None]
 
     def b_body(plan_s, state_s, spiked_src_s, t):
-        state_1 = pb(_drop_lead(plan_s), _drop_lead(state_s),
-                     spiked_src_s[0], t)
+        state_1 = ph.pb(_drop_lead(plan_s), _drop_lead(state_s),
+                        spiked_src_s[0], t)
         return jax.tree.map(lambda x: x[None], state_1)
 
     sm = dist_compat.shard_map
     a_j = jax.jit(sm(a_body, mesh, in_specs=(plan_specs, state_specs, P()),
                      out_specs=(state_specs, pspec, tm_specs)))
+    adyn_j = jax.jit(sm(adyn_body, mesh,
+                        in_specs=(plan_specs, state_specs, P()),
+                        out_specs=(state_specs, pspec, tm_specs)))
+    aplast_j = jax.jit(sm(aplast_body, mesh,
+                          in_specs=(plan_specs, state_specs, pspec, P()),
+                          out_specs=state_specs))
     ex_j = jax.jit(sm(ex_body, mesh, in_specs=(plan_specs, pspec),
                       out_specs=pspec))
     b_j = jax.jit(sm(b_body, mesh,
@@ -293,50 +519,42 @@ def make_phase_fns(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
     def tput(x):
         return dist_sharding.replicated_put(mesh, jnp.int32(x))
 
-    phase_a = lambda state, t: a_j(plan_d, state, tput(t))
-    exchange_fn = lambda spiked: ex_j(plan_d, spiked)
-    phase_b = lambda state, spiked_src, t: b_j(plan_d, state, spiked_src,
-                                               tput(t))
-    return phase_a, exchange_fn, phase_b
+    return PhasePrograms(
+        phase_a=lambda state, t: a_j(plan_d, state, tput(t)),
+        exchange=lambda spiked: ex_j(plan_d, spiked),
+        phase_b=lambda state, ss, t: b_j(plan_d, state, ss, tput(t)),
+        phase_a_dynamics=lambda state, t: adyn_j(plan_d, state, tput(t)),
+        phase_a_plasticity=lambda state, spiked, t: aplast_j(
+            plan_d, state, spiked, tput(t)))
 
 
-def time_phases(phase_fns, state, t0: int, n_steps: int,
-                collect_rasters: bool = False):
-    """Per-step wall-clock attribution over `make_phase_fns` output — the
-    paper's Table 2 split, shared by `repro.cluster.worker` and the
-    `event_vs_dense` bench suite so the warmup/blocking discipline cannot
-    drift between them.
+# ---------------------------------------------------------------------------
+# deprecated entry points (PR 6 API redesign): use core.StepProgram
+# ---------------------------------------------------------------------------
 
-    Returns (final_state, times, rasters): `times` accumulates
-    phase_a_s/exchange_s/phase_b_s over `n_steps` steps (each phase
-    `block_until_ready`-fenced), `rasters` is a list of per-step [H, N]
-    numpy spike masks when `collect_rasters` else None.  The three
-    programs are warmed up (compiled) on `state` first; `state` itself is
-    never mutated."""
-    phase_a, exchange, phase_b = phase_fns
-    s_w, spk_w, _ = phase_a(state, t0)
-    src_w = exchange(spk_w)
-    jax.block_until_ready(phase_b(s_w, src_w, t0))
 
-    times = dict(phase_a_s=0.0, exchange_s=0.0, phase_b_s=0.0)
-    rasters = [] if collect_rasters else None
-    s = state
-    for t in range(t0, t0 + n_steps):
-        c0 = time.perf_counter()
-        s2, spiked, _ = phase_a(s, t)
-        jax.block_until_ready(spiked)
-        times["phase_a_s"] += time.perf_counter() - c0
-        c0 = time.perf_counter()
-        spiked_src = exchange(spiked)
-        jax.block_until_ready(spiked_src)
-        times["exchange_s"] += time.perf_counter() - c0
-        c0 = time.perf_counter()
-        s = phase_b(s2, spiked_src, t)
-        jax.block_until_ready(s)
-        times["phase_b_s"] += time.perf_counter() - c0
-        if collect_rasters:
-            rasters.append(np.asarray(spiked))
-    return s, times, rasters
+def _warn_deprecated(old: str) -> None:
+    warnings.warn(
+        f"core.distributed.{old} is deprecated; construct a "
+        f"core.StepProgram instead (its .run / .phase_fns handles cover "
+        f"this, plus the pipelined schedule and hier exchange)",
+        DeprecationWarning, stacklevel=3)
+
+
+def make_sharded_run(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
+                     eplan=None, caps: Optional[dict] = None):
+    """Deprecated alias of the `StepProgram.run` machinery."""
+    _warn_deprecated("make_sharded_run")
+    return make_run_program(spec, plan, mesh, eplan=eplan, caps=caps)
+
+
+def make_phase_fns(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
+                   eplan=None, caps: Optional[dict] = None):
+    """Deprecated: returns the legacy (phase_a, exchange, phase_b) triple
+    of what is now `StepProgram.phase_fns`."""
+    _warn_deprecated("make_phase_fns")
+    pp = make_phase_programs(spec, plan, mesh, eplan=eplan, caps=caps)
+    return pp.phase_a, pp.exchange, pp.phase_b
 
 
 def shard_put(mesh: Mesh, tree):

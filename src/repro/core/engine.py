@@ -192,12 +192,15 @@ class StepTimings(NamedTuple):
     arrivals: jnp.ndarray     # synaptic arrival count this step
 
 
-def phase_a(spec: SimSpec, plan: ShardPlan, state: ShardState,
-            t: jnp.ndarray, stim_k: jax.Array
-            ) -> Tuple[ShardState, jnp.ndarray, StepTimings]:
-    """Local dynamics: arrivals -> currents -> LTD -> neuron -> LTP.
+def phase_a_dynamics(spec: SimSpec, plan: ShardPlan, state: ShardState,
+                     t: jnp.ndarray, stim_k: jax.Array
+                     ) -> Tuple[ShardState, jnp.ndarray, StepTimings]:
+    """Phase A steps 1-5: arrivals -> currents -> LTD -> stimulus -> neuron.
 
-    Returns (state', spiked[N] bool, timings).
+    Produces the spike mask — everything the exchange needs — WITHOUT the
+    LTP pass, so a pipelined schedule can issue the spike exchange here
+    and overlap it with `phase_a_plasticity`.  Returns (state', spiked,
+    timings); `state'.last_post` is untouched (plasticity owns it).
     """
     from ..kernels import ops as kops
 
@@ -237,19 +240,49 @@ def phase_a(spec: SimSpec, plan: ShardPlan, state: ShardState,
         substeps=izh.v_substeps, use_pallas=up)
     spiked = spiked & plan.neuron_valid
 
-    # 6. LTP for incoming synapses of spiking neurons:
-    #    dW = +a_plus * exp((last_arrival - t) / tau_plus), dt >= 0
-    post = spiked[plan.syn_tgt]
-    w = kops.stdp_ltp(post, w, last_arr, plan.syn_plastic, plan.syn_valid,
-                      tf, a_plus=stdp.a_plus, tau_plus=stdp.tau_plus,
-                      w_min=stdp.w_min, w_max=stdp.w_max,
-                      neg_time=float(NEG_TIME), use_pallas=up)
-    last_post = jnp.where(spiked, tf, state.last_post)
-
-    new = ShardState(v=v, u=u, last_post=last_post, w=w, last_arr=last_arr,
-                     arr_ring=arr_ring)
+    new = ShardState(v=v, u=u, last_post=state.last_post, w=w,
+                     last_arr=last_arr, arr_ring=arr_ring)
     tm = StepTimings(spikes=spiked.sum(), arrivals=arrivals.sum())
     return new, spiked, tm
+
+
+def phase_a_plasticity(spec: SimSpec, plan: ShardPlan, state: ShardState,
+                       spiked: jnp.ndarray, t: jnp.ndarray) -> ShardState:
+    """Phase A step 6: LTP for incoming synapses of spiking neurons.
+
+    dW = +a_plus * exp((last_arrival - t) / tau_plus), dt >= 0.
+    Touches only {w, last_post} — disjoint from phase B's {arr_ring} — so
+    it commutes with spike delivery and is the compute the pipelined
+    schedule hides the exchange behind.
+    """
+    from ..kernels import ops as kops
+
+    stdp = spec.stdp
+    up = spec.eng.use_pallas or None
+    tf = t.astype(jnp.float32)
+    post = spiked[plan.syn_tgt]
+    w = kops.stdp_ltp(post, state.w, state.last_arr, plan.syn_plastic,
+                      plan.syn_valid, tf, a_plus=stdp.a_plus,
+                      tau_plus=stdp.tau_plus, w_min=stdp.w_min,
+                      w_max=stdp.w_max, neg_time=float(NEG_TIME),
+                      use_pallas=up)
+    last_post = jnp.where(spiked, tf, state.last_post)
+    return state._replace(w=w, last_post=last_post)
+
+
+def phase_a(spec: SimSpec, plan: ShardPlan, state: ShardState,
+            t: jnp.ndarray, stim_k: jax.Array
+            ) -> Tuple[ShardState, jnp.ndarray, StepTimings]:
+    """Local dynamics: arrivals -> currents -> LTD -> neuron -> LTP.
+
+    Composition of `phase_a_dynamics` + `phase_a_plasticity` (the split
+    exists for the pipelined exchange schedule; composing them is
+    bit-identical to the original fused phase A).  Returns
+    (state', spiked[N] bool, timings).
+    """
+    state, spiked, tm = phase_a_dynamics(spec, plan, state, t, stim_k)
+    state = phase_a_plasticity(spec, plan, state, spiked, t)
+    return state, spiked, tm
 
 
 def phase_b(spec: SimSpec, plan: ShardPlan, state: ShardState,

@@ -138,20 +138,19 @@ def init_event_state(spec: SimSpec, base: ShardState, cap_ev: int
 # ---------------------------------------------------------------------------
 
 
-def phase_a(spec: SimSpec, plan: ShardPlan, eplan: EventPlan,
-            st: EventState, t: jnp.ndarray, stim_k,
-            c_post: Optional[int] = None
-            ) -> Tuple[EventState, jnp.ndarray, StepTimings]:
-    """Local dynamics on the event subset; returns (state', spiked, tm) —
-    the same contract as `engine.phase_a`, so the distributed drivers can
-    dispatch between backends without branching downstream."""
+def phase_a_dynamics(spec: SimSpec, plan: ShardPlan, eplan: EventPlan,
+                     st: EventState, t: jnp.ndarray, stim_k
+                     ) -> Tuple[EventState, jnp.ndarray, StepTimings]:
+    """Event phase A minus LTP: arrival list -> currents/LTD -> stimulus ->
+    neuron update.  Same split contract as `engine.phase_a_dynamics`: the
+    returned spike mask is everything the exchange needs, so the
+    pipelined schedule issues it here and hides it behind
+    `phase_a_plasticity`."""
     cfg, stdp, izh = spec.cfg, spec.stdp, spec.izh
     D = cfg.n_delay_slots
     tf = t.astype(jnp.float32)
     r = jnp.mod(t, D)
     base = st.base
-    if c_post is None:
-        c_post = default_caps(spec)[0]
 
     # ---- arrivals: only this slot's event list ----
     ev = st.ev_ring[r]                                  # [cap_ev]
@@ -189,29 +188,58 @@ def phase_a(spec: SimSpec, plan: ShardPlan, eplan: EventPlan,
         dt=izh.dt, substeps=izh.v_substeps)
     spiked = spiked & plan.neuron_valid
 
-    # ---- LTP: incoming rows of the COMPACTED spiking-neuron list ----
+    new = st._replace(
+        base=base._replace(v=v, u=u, w=w, last_arr=last_arr),
+        ev_ring=ev_ring, ev_count=ev_count)
+    tm = StepTimings(spikes=spiked.sum(),
+                     arrivals=valid.sum(dtype=jnp.int32))
+    return new, spiked, tm
+
+
+def phase_a_plasticity(spec: SimSpec, plan: ShardPlan, eplan: EventPlan,
+                       st: EventState, spiked: jnp.ndarray, t: jnp.ndarray,
+                       c_post: Optional[int] = None) -> EventState:
+    """Event phase A's LTP pass: incoming rows of the COMPACTED
+    spiking-neuron list.  Touches only {w, last_post, sat} — disjoint
+    from phase B's {ev_ring, ev_count} writes — which is what makes
+    overlapping the exchange with it legal."""
+    stdp = spec.stdp
+    tf = t.astype(jnp.float32)
+    base = st.base
+    if c_post is None:
+        c_post = default_caps(spec)[0]
+
     n = spec.n_local
+    oob = jnp.int32(base.w.shape[0])       # out-of-bounds drop sentinel
     spk_ids, post_sat = _compact(spiked, c_post, fill=n)
     rows = eplan.in_rows[jnp.minimum(spk_ids, n - 1)]    # [C_post, Ki]
     e_in = jnp.where((spk_ids < n)[:, None], rows, -1).reshape(-1)
     vin = e_in >= 0
     ein = jnp.maximum(e_in, 0)
-    la_in = last_arr[ein]
-    w_in = w[ein]
+    la_in = base.last_arr[ein]
+    w_in = base.w[ein]
     ltp = stdp.a_plus * jnp.exp((la_in - tf) / stdp.tau_plus)
     apply_ltp = vin & plan.syn_plastic[ein] & (la_in > NEG_TIME / 2)
     w_upd = jnp.where(apply_ltp,
                       jnp.clip(w_in + ltp, stdp.w_min, stdp.w_max), w_in)
-    w = w.at[jnp.where(vin, e_in, oob)].set(w_upd, mode="drop")
+    w = base.w.at[jnp.where(vin, e_in, oob)].set(w_upd, mode="drop")
     last_post = jnp.where(spiked, tf, base.last_post)
+    return st._replace(base=base._replace(w=w, last_post=last_post),
+                       sat=st.sat + post_sat)
 
-    new = st._replace(
-        base=base._replace(v=v, u=u, w=w, last_arr=last_arr,
-                           last_post=last_post),
-        ev_ring=ev_ring, ev_count=ev_count, sat=st.sat + post_sat)
-    tm = StepTimings(spikes=spiked.sum(),
-                     arrivals=valid.sum(dtype=jnp.int32))
-    return new, spiked, tm
+
+def phase_a(spec: SimSpec, plan: ShardPlan, eplan: EventPlan,
+            st: EventState, t: jnp.ndarray, stim_k,
+            c_post: Optional[int] = None
+            ) -> Tuple[EventState, jnp.ndarray, StepTimings]:
+    """Local dynamics on the event subset; returns (state', spiked, tm) —
+    the same contract as `engine.phase_a`, so the distributed drivers can
+    dispatch between backends without branching downstream.  Composition
+    of `phase_a_dynamics` + `phase_a_plasticity`, bit-identical to the
+    former fused version."""
+    st, spiked, tm = phase_a_dynamics(spec, plan, eplan, st, t, stim_k)
+    st = phase_a_plasticity(spec, plan, eplan, st, spiked, t, c_post=c_post)
+    return st, spiked, tm
 
 
 def phase_b(spec: SimSpec, plan: ShardPlan, eplan: EventPlan,

@@ -123,9 +123,19 @@ class EngineConfig:
     #          load-balancing proposal (neurons of one column spread over
     #          many processes).
     placement: str = "block"
-    # spike exchange: 'allgather' (global mask) or 'halo' (ppermute over the
-    # static 3rd-neighbour shard halo; paper's sparse two-phase analogue).
+    # spike exchange: 'allgather' (global mask), 'halo' (ppermute over the
+    # static 3rd-neighbour shard halo; paper's sparse two-phase analogue),
+    # or 'hier' (two-level: intra-process all_gather over the shards each
+    # process owns, then neighbourhood-only inter-process ppermute at
+    # whole-group stride — the paper's cluster topology made explicit).
     exchange: str = "allgather"
+    # exchange issue order: 'sync' runs phase A -> exchange -> phase B in
+    # program order; 'pipelined' issues the exchange for step t right after
+    # the dynamics half of phase A(t) so it overlaps the plasticity half,
+    # with deferred delivery B(t) double-buffered into the next loop
+    # iteration.  Both schedules execute the identical op sequence per
+    # step, so rasters AND weights are bit-identical (Table 1 invariant).
+    exchange_schedule: str = "sync"
     # current/STDP delivery backend: 'dense' (O(E) masked vector ops,
     # TPU-idiomatic, bit-reproducible) or 'event' (O(spikes x fan) gathered
     # rows; Pallas kernel target).

@@ -249,7 +249,8 @@ def _snn_lower(spec, mesh, plan_abs, state_abs):
         lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
         state_abs)
 
-    # mirror make_sharded_run but lower with abstract plan as an ARGUMENT
+    # mirror distributed.make_run_program (StepProgram's shard_map body)
+    # but lower with abstract plan as an ARGUMENT
     from repro.core import engine, stimulus
     spec_ = spec
     stim_k = stimulus.stim_key(spec.cfg)

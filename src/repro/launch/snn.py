@@ -1,8 +1,8 @@
 """DPSNN simulation launcher (the paper's workload).
 
   python -m repro.launch.snn --grid 4x4 --steps 500 [--shards 4]
-      [--exchange halo|allgather] [--placement block|scatter]
-      [--delivery dense|event]
+      [--exchange halo|allgather|hier] [--exchange-schedule sync|pipelined]
+      [--placement block|scatter] [--delivery dense|event]
       [--profile ring3|gaussian:sigma=1.5|...] [--ckpt-dir DIR]
 
 `--delivery event` runs the paper's event-driven synaptic formulation
@@ -33,8 +33,8 @@ cluster_runtime.ensure_initialized()
 import jax
 import numpy as np
 
-from repro.core import (EngineConfig, GridConfig, build_delivery,
-                        checkpoint, observables, profiles, run_delivery)
+from repro.core import (EngineConfig, GridConfig, StepProgram, checkpoint,
+                        observables, profiles)
 from repro.core import distributed as D
 
 
@@ -46,7 +46,12 @@ def main():
     ap.add_argument("--steps", type=int, default=500)
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--exchange", default="allgather",
-                    choices=["allgather", "halo"])
+                    choices=["allgather", "halo", "hier"])
+    ap.add_argument("--exchange-schedule", default="sync",
+                    choices=["sync", "pipelined"],
+                    help="'pipelined' issues the spike exchange before the "
+                         "LTP half of phase A and delivers one loop "
+                         "iteration later (bit-identical outputs)")
     ap.add_argument("--delivery", default="dense",
                     choices=["dense", "event"])
     ap.add_argument("--placement", default="block",
@@ -66,6 +71,7 @@ def main():
                      synapses_per_neuron=args.synapses,
                      connectivity=args.profile)
     eng = EngineConfig(n_shards=args.shards, exchange=args.exchange,
+                       exchange_schedule=args.exchange_schedule,
                        placement=args.placement, delivery=args.delivery)
     prof = profiles.from_config(cfg)       # fail fast on a bad spec
     if cluster_runtime.is_primary():
@@ -76,32 +82,34 @@ def main():
               f"{args.placement}, {prof.spec()} reach={prof.reach()}"
               f"{procs})")
 
-    # Build: the event backend layers an EventPlan + EventState on top of
-    # the dense plan; every downstream path (run loop, checkpoint,
-    # sharding, cluster gather) is backend-generic from here on.
+    # Build: one StepProgram per process covers both delivery backends,
+    # every exchange wire and both schedules; the run loop, checkpoint,
+    # sharding and cluster gather are backend-generic from here on.
     event = args.delivery == "event"
-    spec, plan, eplan, state, cap_ev = build_delivery(cfg, eng)
-    t0 = 0
-    if args.ckpt_dir:
-        latest = checkpoint.latest(args.ckpt_dir)
-        if latest:
-            state, t0 = checkpoint.load(latest, spec, plan, cap_ev=cap_ev)
-            if cluster_runtime.is_primary():
-                print(f"[snn] resumed at t={t0} from {latest}")
-
-    if args.shards > 1:
+    sharded = args.shards > 1
+    if sharded:
         # jax.devices() is global: across every process of a cluster job
         assert len(jax.devices()) >= args.shards, \
             "set XLA_FLAGS=--xla_force_host_platform_device_count " \
             "or launch more processes (repro.cluster.local)"
-        mesh = D.make_mesh(args.shards)
-        state_d = D.shard_put(mesh, state)
-        runner = D.make_sharded_run(spec, plan, mesh, eplan=eplan)
+    sp = StepProgram(cfg, eng,
+                     mesh=D.make_mesh(args.shards) if sharded else None)
+    spec, plan, state = sp.spec, sp.plan, sp.init_state()
+    t0 = 0
+    if args.ckpt_dir:
+        latest = checkpoint.latest(args.ckpt_dir)
+        if latest:
+            state, t0 = sp.load(latest)
+            if cluster_runtime.is_primary():
+                print(f"[snn] resumed at t={t0} from {latest}")
+
+    if sharded:
+        state_d = sp.place(state)
         chunk = args.ckpt_every or args.steps
         t = t0
         while t < t0 + args.steps:
             n = min(chunk, t0 + args.steps - t)
-            state_d, raster, tm = runner(state_d, t, n)
+            state_d, raster, tm = sp.run(state_d, t, n)
             t += n
             if args.ckpt_dir:
                 # gather is a collective (all processes), the write is not
@@ -116,7 +124,7 @@ def main():
         t = t0
         while t < t0 + args.steps:
             n = min(chunk, t0 + args.steps - t)
-            state, raster, tm = run_delivery(spec, plan, eplan, state, t, n)
+            state, raster, tm = sp.run(state, t, n)
             t += n
             # primary-only for the same reason as the sharded branch: a
             # cluster job with --shards 1 runs one replica per process,

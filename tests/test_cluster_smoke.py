@@ -43,6 +43,28 @@ def test_halo_exchange_across_processes():
     assert row["raster_sig"] == ref
 
 
+def test_pipelined_schedule_across_processes():
+    """The pipelined exchange schedule over a REAL process boundary: the
+    one-step-lagged double-buffered exchange must still produce a raster
+    bit-identical to the single-process engine (whose reference driver is
+    schedule-independent by construction) — comm/compute overlap is an
+    execution layout, never physics."""
+    require_cluster()
+    args = cli.workload_namespace(**WORKLOAD, exchange="halo",
+                                  exchange_schedule="pipelined",
+                                  phase_steps=8)
+    row = cli.run_point(args, nprocs=2, timeout=600)
+    assert row["exchange_schedule"] == "pipelined"
+    # the schedule-aware phase split ran on every process
+    for pp in row["per_proc"]:
+        for k in ("phase_a_s", "exchange_s", "phase_b_s"):
+            assert pp[k] >= 0.0
+    ref = cli.reference_signature(args)
+    assert row["raster_sig"] == ref, \
+        "pipelined cross-process raster differs from the single-process " \
+        "engine"
+
+
 def test_event_delivery_across_processes():
     """The EVENT backend across a real process boundary: a 2-proc x
     2-shard event run must produce rasters bit-identical to the 1-process

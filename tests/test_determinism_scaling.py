@@ -14,7 +14,7 @@ from _mp_helpers import run_with_devices
 
 _CODE = """
 import numpy as np
-from repro.core import EngineConfig, GridConfig, build, observables
+from repro.core import EngineConfig, GridConfig, StepProgram, observables
 from repro.core import distributed as D
 
 cfg = GridConfig(grid_x={gx}, grid_y={gy}, neurons_per_column={npc},
@@ -25,15 +25,13 @@ n_offsets = {{}}
 for H in (1, 2, 4):
     for exchange in ("halo", "allgather"):
         eng = EngineConfig(n_shards=H, exchange=exchange)
-        spec, plan, state = build(cfg, eng)
+        sp = StepProgram(cfg, eng, mesh=D.make_mesh(H))
         if exchange == "halo":
-            n_offsets[H] = len(D.halo_offsets(spec, plan))
-        mesh = D.make_mesh(H)
-        state_d = D.shard_put(mesh, state)
-        runner = D.make_sharded_run(spec, plan, mesh)
-        _, raster, _ = runner(state_d, 0, {steps})
+            n_offsets[H] = len(D.halo_offsets(sp.spec, sp.plan))
+        state_d = sp.place(sp.init_state())
+        _, raster, _ = sp.run(state_d, 0, {steps})
         sigs[(H, exchange)] = observables.raster_signature(
-            np.asarray(raster), np.asarray(plan.gid))
+            np.asarray(raster), np.asarray(sp.plan.gid))
 
 vals = set(sigs.values())
 assert len(vals) == 1, f'raster signatures diverge: {{sigs}}'

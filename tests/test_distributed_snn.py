@@ -33,27 +33,25 @@ def test_halo_offsets_cover_connectivity():
 
 _DIST_CODE = """
 import numpy as np
-from repro.core import EngineConfig, GridConfig, build, observables, run
+from repro.core import EngineConfig, GridConfig, StepProgram, observables
 from repro.core import distributed as D
 
 cfg = GridConfig(grid_x=2, grid_y=2, neurons_per_column=100,
                  synapses_per_neuron=40, seed=7)
 eng = EngineConfig(n_shards=4, exchange={exchange!r}, placement={placement!r})
 
-# reference: single-process vmap driver
-spec, plan, state = build(cfg, eng)
-_, raster_ref, _ = run(spec, plan, state, 0, 120)
+# reference: single-process vmap driver (StepProgram without a mesh)
+sp_ref = StepProgram(cfg, eng)
+_, raster_ref, _ = sp_ref.run(sp_ref.init_state(), 0, 120)
 sig_ref = observables.raster_signature(np.asarray(raster_ref),
-                                       np.asarray(plan.gid))
+                                       np.asarray(sp_ref.plan.gid))
 
-# distributed: one shard per device (make_sharded_run places the plan)
-mesh = D.make_mesh(4)
-spec2, _, state_d = build(cfg, eng)
-state_d = D.shard_put(mesh, state_d)
-runner = D.make_sharded_run(spec, plan, mesh)
-state_d, raster_d, tm = runner(state_d, 0, 120)
+# distributed: one shard per device (StepProgram places the plan)
+sp = StepProgram(cfg, eng, mesh=D.make_mesh(4))
+state_d = sp.place(sp.init_state())
+state_d, raster_d, tm = sp.run(state_d, 0, 120)
 sig_d = observables.raster_signature(np.asarray(raster_d),
-                                     np.asarray(plan.gid))
+                                     np.asarray(sp.plan.gid))
 assert sig_d == sig_ref, 'distributed raster differs from reference'
 print('OK', int(np.asarray(raster_d).sum()))
 """
@@ -77,7 +75,7 @@ def test_shard_map_scatter_placement():
 _EVENT_DIST_CODE = """
 import jax
 import numpy as np
-from repro.core import EngineConfig, GridConfig, observables
+from repro.core import EngineConfig, GridConfig, StepProgram, observables
 from repro.core import distributed as D
 from repro.core import event_engine as EV
 
@@ -93,10 +91,9 @@ sig_ref = observables.raster_signature(np.asarray(raster_ref),
                                        np.asarray(plan.gid))
 
 # distributed: one shard per device, event plan threaded as a jit arg
-mesh = D.make_mesh(4)
-state_d = D.shard_put(mesh, state)
-runner = D.make_sharded_run(spec, plan, mesh, eplan=eplan)
-state_d, raster_d, tm = runner(state_d, 0, 120)
+sp = StepProgram.from_parts(spec, plan, eplan, mesh=D.make_mesh(4))
+state_d = sp.place(state)
+state_d, raster_d, tm = sp.run(state_d, 0, 120)
 sig_d = observables.raster_signature(np.asarray(raster_d),
                                      np.asarray(plan.gid))
 assert sig_d == sig_ref, 'event shard_map raster differs from reference'
