@@ -5,10 +5,22 @@ gate against committed baselines.
   python -m repro.bench run [names...] [--quick] [--all] [--out DIR]
   python -m repro.bench compare [names...] [--current DIR]
                                 [--baseline DIR] [--wall-tol F]
+  python -m repro.bench plan run|resume PLANFILE [--out DIR]
+                                [--assert-complete]
+  python -m repro.bench plan report PLANFILE [--out DIR]
+                                [--history DIR] [--partial]
+  python -m repro.bench plan expand PLANFILE
 
 `run` with no names executes every non-slow suite; `compare` exits
 nonzero on any deterministic drift (see repro.bench.report for the
-policy), which is what the CI bench job gates on.
+policy), which is what the CI bench job gates on.  `plan` commands drive
+config-driven experiment plans (repro.bench.plans): `run` executes every
+incomplete cell of the plan (so it doubles as resume; `resume` insists
+prior results exist), `report` merges cell results into a gateable
+BENCH_plan_<name>.json plus a static HTML dashboard, and `expand` prints
+the cell list without running anything.  Inside GitHub Actions the
+compare and plan commands also append their summaries to
+$GITHUB_STEP_SUMMARY.
 """
 from __future__ import annotations
 
@@ -16,10 +28,11 @@ import argparse
 import sys
 import traceback
 
-from . import registry, report
+from . import _summary, registry, report
 
 DEFAULT_OUT = "results/bench"
 DEFAULT_BASELINES = "benchmarks/baselines"
+DEFAULT_PLAN_OUT = "results/plans"
 
 
 def _cmd_list(args) -> int:
@@ -56,8 +69,72 @@ def _cmd_compare(args) -> int:
     res = report.compare_dirs(args.current, args.baseline,
                               names=args.names or None,
                               wall_tol=args.wall_tol)
-    print(res.render())
+    rendered = res.render()
+    print(rendered)
+    _summary.append(_summary.code_block(
+        rendered, title=f"bench compare ({args.current} vs "
+                        f"{args.baseline})"))
     return 0 if res.ok else 1
+
+
+def _cmd_plan(args) -> int:
+    from . import plans
+
+    try:
+        plan = plans.load(args.plan)
+    except plans.PlanError as e:
+        print(e)
+        return 2
+
+    if args.plan_cmd == "expand":
+        cells, excluded = plans.expand(plan)
+        for c in cells:
+            print(f"{c['key']}  hash={c['hash']}  "
+                  f"group={c['physics_group']}")
+        for ex in excluded:
+            print(f"EXCLUDED  {plans.cell_key(ex['cell'])}: "
+                  f"{ex['reason']}")
+        print(f"{len(cells)} cell(s), {len(excluded)} excluded")
+        return 0
+
+    store = plans.ResultStore(args.out, plan.name)
+    if args.plan_cmd in ("run", "resume"):
+        if args.plan_cmd == "resume" and not store.exists():
+            print(f"[plan {plan.name}] nothing to resume under "
+                  f"{store.root} — use `plan run`")
+            return 2
+        summary = plans.run_plan(
+            plan, args.out,
+            assert_complete=getattr(args, "assert_complete", False))
+        return 0 if summary["ok"] else 1
+
+    # report: merged BENCH json + dashboard
+    try:
+        path, rep = plans.write_report(plan, args.out,
+                                       allow_partial=args.partial)
+    except plans.PlanError as e:
+        print(e)
+        return 1
+    print(f"[plan {plan.name}] wrote {path} "
+          f"({len(rep['deterministic'])} deterministic, "
+          f"{len(rep['wall'])} wall metrics)")
+
+    from .plans import dashboard as dash
+    records = rep["extra"]["cells"]
+    history = report.load_dir(args.history) if args.history else {}
+    html_path = dash.write(
+        f"{store.root}/dashboard.html", plan.to_config(), records,
+        history=history, summary=store.load_summary())
+    print(f"[plan {plan.name}] wrote {html_path} "
+          f"({len(records)} cells, {len(history)} history suites)")
+
+    bad = [g for g, d in rep["extra"]["groups"].items()
+           if not d["identical"]]
+    if bad:
+        print(f"[plan {plan.name}] Table 1 invariant VIOLATED in "
+              f"group(s): {bad}")
+        return 1
+    return 0
 
 
 def main(argv=None) -> int:
@@ -92,9 +169,39 @@ def main(argv=None) -> int:
                     help="relative wall-clock warn threshold "
                          "(default 0.5 = ±50%%)")
 
+    pp = sub.add_parser("plan",
+                        help="config-driven experiment plans "
+                             "(run/resume/report/expand)")
+    psub = pp.add_subparsers(dest="plan_cmd", required=True)
+    for pcmd, phelp in (("run", "execute every incomplete cell"),
+                        ("resume", "like run, but requires prior "
+                                   "results to exist")):
+        q = psub.add_parser(pcmd, help=phelp)
+        q.add_argument("plan", help="plan file (benchmarks/plans/*.yaml)")
+        q.add_argument("--out", default=DEFAULT_PLAN_OUT,
+                       help=f"result store root "
+                            f"(default {DEFAULT_PLAN_OUT})")
+        q.add_argument("--assert-complete", action="store_true",
+                       help="exit nonzero if ANY cell had to execute "
+                            "(CI resume proof: a second run must skip "
+                            "everything)")
+    q = psub.add_parser("report",
+                        help="merge cells -> BENCH_plan_<name>.json + "
+                             "dashboard.html")
+    q.add_argument("plan")
+    q.add_argument("--out", default=DEFAULT_PLAN_OUT)
+    q.add_argument("--history", default=DEFAULT_BASELINES,
+                   help=f"BENCH_*.json history charted in the dashboard "
+                        f"(default {DEFAULT_BASELINES}; '' disables)")
+    q.add_argument("--partial", action="store_true",
+                   help="report over an incomplete store (missing cells "
+                        "are simply absent)")
+    q = psub.add_parser("expand", help="print the expanded cell list")
+    q.add_argument("plan")
+
     args = ap.parse_args(argv)
-    return {"list": _cmd_list, "run": _cmd_run,
-            "compare": _cmd_compare}[args.cmd](args)
+    return {"list": _cmd_list, "run": _cmd_run, "compare": _cmd_compare,
+            "plan": _cmd_plan}[args.cmd](args)
 
 
 if __name__ == "__main__":

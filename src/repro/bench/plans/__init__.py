@@ -1,0 +1,32 @@
+"""repro.bench.plans — config-driven, resumable experiment orchestration.
+
+The beNNch idea (arXiv:2112.09018) applied to this benchmark: a sweep
+like "profiles x delivery x exchange x schedule x process counts on this
+grid ladder" is a committed YAML/JSON file, not a shell history.
+
+  schema     plan documents -> validated `Plan` (strict: typos fail)
+  expand     axes product -> cells with stable keys + content hashes
+  store      one result file per completed cell; hash-keyed resume
+  runner     executes cells via bench.subproc / repro.cluster, skips
+             completed ones, exits with an executed/skipped/failed
+             summary
+  reporting  merges cells into BENCH_plan_<name>.json (the existing
+             comparator gates it like any suite)
+  dashboard  static inline-SVG HTML: scaling curves, per-phase stacked
+             bars, hidden-exchange fractions, time/synaptic-event, plus
+             the committed BENCH history
+
+CLI: `python -m repro.bench plan run|resume|report|expand <plan file>`;
+committed plans live in `benchmarks/plans/`.
+"""
+from .schema import Plan, PlanError, load, validate
+from .expand import cell_hash, cell_key, expand, physics_group
+from .store import ResultStore
+from .runner import run_plan
+from .reporting import merged_report, write_report
+
+__all__ = [
+    "Plan", "PlanError", "load", "validate",
+    "cell_hash", "cell_key", "expand", "physics_group",
+    "ResultStore", "run_plan", "merged_report", "write_report",
+]

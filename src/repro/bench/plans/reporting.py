@@ -1,0 +1,118 @@
+"""Merge completed plan cells into a gateable `BENCH_plan_<name>.json`.
+
+The merged report rides the existing `repro.bench.report` schema
+(version 1), so the committed comparator — and therefore CI — gates plan
+results exactly like any other suite:
+
+  deterministic   per-cell spike totals and raster signatures, plus one
+                  `identical_<physics group>` flag per group of cells
+                  that share physics but differ in execution layout
+                  (shards, processes, exchange, schedule, placement,
+                  delivery) — the paper's Table 1 invariant as data;
+  wall            per-cell fused wall + per-phase A/exchange/B splits
+                  (tolerance-compared, never a hard failure);
+  config          the plan document itself (env-independent, so two
+                  machines running the same committed plan compare);
+  extra           full cell records + the runner summary, for dashboards
+                  and humans.
+
+A report over an incomplete store is refused unless `allow_partial`
+(a partial report would gate as "metric missing" failures downstream and
+mask the real problem: unfinished cells).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from .. import report as bench_report
+from .expand import expand
+from .schema import Plan, PlanError
+from .store import ResultStore
+
+PHASE_KEYS = ("phase_a_s", "exchange_s", "phase_b_s")
+
+
+def collect(plan: Plan, store: ResultStore,
+            env: Optional[dict] = None) -> Tuple[List[dict], List[str]]:
+    """(completed records in plan order, missing cell keys)."""
+    cells, _ = expand(plan, env=env)
+    records, missing = [], []
+    for cell in cells:
+        rec = store.load_cell(cell["key"])
+        if rec is None or rec.get("hash") != cell["hash"]:
+            missing.append(cell["key"])
+        else:
+            records.append(rec)
+    return records, missing
+
+
+def identity_groups(records: List[dict]) -> Dict[str, dict]:
+    """physics_group -> {cells, sigs, identical}: the Table 1 invariant
+    across every execution-layout variant the plan swept."""
+    groups: Dict[str, dict] = {}
+    for rec in records:
+        g = rec["cell"].get("physics_group", "ungrouped")
+        d = groups.setdefault(g, dict(cells=[], sigs=set()))
+        d["cells"].append(rec["key"])
+        sig = rec["result"].get("raster_sig")
+        if sig:
+            d["sigs"].add(sig)
+    for d in groups.values():
+        d["identical"] = len(d["sigs"]) <= 1
+        d["sigs"] = sorted(d["sigs"])
+    return groups
+
+
+def merged_report(plan: Plan, records: List[dict],
+                  summary: Optional[dict] = None) -> dict:
+    """Cell records -> BENCH-schema report named `plan_<plan name>`."""
+    deterministic, wall = {}, {}
+    for rec in records:
+        key, res = rec["key"], rec["result"]
+        if "spikes" in res:
+            deterministic[f"{key}_spikes"] = int(res["spikes"])
+        if "raster_sig" in res:
+            deterministic[f"{key}_sig"] = str(res["raster_sig"])
+        if "saturated" in res:
+            deterministic[f"{key}_saturated"] = int(res["saturated"])
+        if "wall_s" in res:
+            wall[f"{key}_wall_s"] = res["wall_s"]
+        for pk in PHASE_KEYS:
+            if pk in res:
+                wall[f"{key}_{pk}"] = res[pk]
+
+    groups = identity_groups(records)
+    for g, d in sorted(groups.items()):
+        if len(d["cells"]) > 1:
+            deterministic[f"identical_{g}"] = bool(d["identical"])
+
+    extra = dict(cells=[dict(key=r["key"], hash=r["hash"], cell=r["cell"],
+                             result=r["result"],
+                             elapsed_s=r.get("elapsed_s"))
+                        for r in records],
+                 groups={g: dict(cells=d["cells"], sigs=d["sigs"],
+                                 identical=d["identical"])
+                         for g, d in groups.items()})
+    if summary is not None:
+        extra["summary"] = summary
+    return bench_report.make_report(f"plan_{plan.name}", plan.to_config(),
+                                    deterministic, wall, extra=extra)
+
+
+def write_report(plan: Plan, out_root: str, *,
+                 allow_partial: bool = False,
+                 env: Optional[dict] = None) -> Tuple[str, dict]:
+    """Merge the store into BENCH_plan_<name>.json inside the store dir;
+    returns (path, report).  Raises PlanError when cells are missing and
+    `allow_partial` is not set."""
+    store = ResultStore(out_root, plan.name)
+    records, missing = collect(plan, store, env=env)
+    if missing and not allow_partial:
+        raise PlanError(
+            [f"{len(missing)} of {len(missing) + len(records)} cells "
+             f"have no (current) result — run `plan run`/`plan resume` "
+             f"first, or pass --partial for a provisional report"]
+            + [f"missing: {k}" for k in missing[:10]])
+    rep = merged_report(plan, records, summary=store.load_summary())
+    path = bench_report.save(rep, store.root)
+    return path, rep

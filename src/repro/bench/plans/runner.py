@@ -1,0 +1,209 @@
+"""Plan runner: execute expanded cells resumably, one result file each.
+
+Single-process cells (`nprocs == 1`) run through the existing
+fresh-interpreter machinery (`repro.bench.subproc`): each cell's
+subprocess forces its own host device count (= shards), builds a
+`StepProgram` on a real mesh and reports the fused wall, spike totals,
+raster signature and — when the plan budgets phase steps — the per-phase
+A/exchange/B split from `StepProgram.time_phases`.  Multi-process cells
+delegate to `repro.cluster` (the same launcher+worker path the
+cluster_scaling suite uses), so plan results and the committed BENCH
+history stay directly comparable.
+
+Every completed cell is persisted through `ResultStore` keyed by its
+content hash; a second `run` (or `resume`) skips completed cells and the
+exit summary counts executed/skipped/failed — CI re-runs the committed
+quick plan and asserts `executed == 0` (the `--assert-complete` flag) to
+prove resume end-to-end.  Failed cells are reported, leave no result
+file, and make the runner exit nonzero; everything else still runs, so
+one flaky point never costs the whole sweep.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Callable, List, Optional
+
+from .. import _summary
+from .expand import expand, runtime_env
+from .schema import Plan
+from .store import ResultStore
+
+# executed in a fresh interpreter with `shards` forced host devices; the
+# cell dict is substituted as JSON (no .format: the source has braces)
+_CELL_SRC = """
+import json, time
+import numpy as np
+import jax
+from repro.core import EngineConfig, GridConfig, StepProgram, observables
+from repro.core import distributed as D
+
+cell = json.loads(__CELL_JSON__)
+gx, gy = (int(v) for v in cell["grid"].split("x"))
+cfg = GridConfig(grid_x=gx, grid_y=gy,
+                 neurons_per_column=cell["neurons_per_column"],
+                 synapses_per_neuron=cell["synapses_per_neuron"],
+                 seed=cell["seed"], connectivity=cell["profile"],
+                 stim_events_per_ms_per_column=cell["stim_events"],
+                 stim_amplitude=cell["stim_amplitude"])
+eng = EngineConfig(n_shards=cell["shards"], exchange=cell["exchange"],
+                   exchange_schedule=cell["exchange_schedule"],
+                   placement=cell["placement"], delivery=cell["delivery"])
+sp = StepProgram(cfg, eng, mesh=D.make_mesh(cell["shards"]))
+state = sp.place(sp.init_state())
+jax.block_until_ready(sp.run(state, 0, cell["steps"])[1])      # compile
+wall = None
+for _ in range(cell["reps"]):
+    t0 = time.perf_counter()
+    state_f, raster, _ = sp.run(state, 0, cell["steps"])
+    jax.block_until_ready(raster)
+    w = time.perf_counter() - t0
+    wall = w if wall is None else min(wall, w)
+raster = np.asarray(raster)
+res = dict(wall_s=round(wall, 4), spikes=int(raster.sum()),
+           rate_hz=round(observables.mean_rate_hz(raster,
+                                                  cfg.n_neurons), 3),
+           raster_sig=observables.raster_signature(
+               raster, np.asarray(sp.plan.gid)).hex())
+if cell["delivery"] == "event":
+    res["saturated"] = int(np.asarray(state_f.sat).sum())
+if cell["phase_steps"]:
+    _, times, _, counts = sp.time_phases(state, 0, cell["phase_steps"])
+    res.update((k, round(v, 4)) for k, v in times.items())
+    res["phase_steps"] = cell["phase_steps"]
+    res["arrivals"] = int(counts["arrivals"])
+print("PLAN_CELL " + json.dumps(res))
+"""
+
+RESULT_PREFIX = "PLAN_CELL "
+
+
+class CellError(RuntimeError):
+    pass
+
+
+def _finalize(cell: dict, res: dict) -> dict:
+    """Uniform derived metrics: the paper's normalized elapsed time per
+    synaptic event (each spike fans out to synapses_per_neuron targets),
+    computable identically for local and cluster cells."""
+    events = res.get("spikes", 0) * cell["synapses_per_neuron"]
+    if res.get("wall_s") and events:
+        res["time_per_syn_event_s"] = float(
+            f"{res['wall_s'] / events:.3e}")
+    return res
+
+
+def run_local_cell(cell: dict, timeout: Optional[float] = None) -> dict:
+    """One fresh-interpreter cell on `cell['shards']` forced devices."""
+    from ..subproc import run_subprocess
+    code = _CELL_SRC.replace("__CELL_JSON__",
+                             repr(json.dumps(cell, sort_keys=True)))
+    out = run_subprocess(code, n_devices=cell["shards"], timeout=timeout)
+    for line in out.splitlines():
+        if line.startswith(RESULT_PREFIX):
+            return _finalize(cell, json.loads(line[len(RESULT_PREFIX):]))
+    raise CellError(f"no {RESULT_PREFIX!r} line in cell output:\n"
+                    f"{out[-2000:]}")
+
+
+def run_cluster_cell(cell: dict, timeout: Optional[float] = None) -> dict:
+    """One real multi-process cell via the repro.cluster launcher."""
+    from ...cluster import cli as cluster_cli
+    row = cluster_cli.run_plan_cell(cell, timeout=timeout)
+    keep = ("wall_s", "spikes", "rate_hz", "raster_sig", "saturated",
+            "phase_a_s", "exchange_s", "phase_b_s", "per_proc")
+    res = {k: row[k] for k in keep if k in row}
+    if cell["phase_steps"]:
+        res["phase_steps"] = cell["phase_steps"]
+    return _finalize(cell, res)
+
+
+def execute_cell(cell: dict, timeout: Optional[float] = None) -> dict:
+    if cell["nprocs"] > 1:
+        return run_cluster_cell(cell, timeout=timeout)
+    return run_local_cell(cell, timeout=timeout)
+
+
+def run_plan(plan: Plan, out_root: str, *,
+             assert_complete: bool = False,
+             executor: Optional[Callable[[dict], dict]] = None,
+             env: Optional[dict] = None,
+             log: Callable[[str], None] = print) -> dict:
+    """Execute every incomplete cell of `plan`; returns the exit summary
+
+      {plan, total, executed, skipped, failed, excluded, ok,
+       executed_keys, skipped_keys, failed_keys}
+
+    `ok` is False when any cell failed, or when `assert_complete` was set
+    and anything had to execute (the CI resume proof).  `executor`
+    overrides cell execution (tests inject fakes); `env` overrides the
+    hash environment the same way.
+    """
+    env = env if env is not None else runtime_env()
+    executor = executor or (
+        lambda c: execute_cell(c, timeout=plan.budgets["timeout_s"]))
+    cells, excluded = expand(plan, env=env)
+    store = ResultStore(out_root, plan.name)
+
+    executed, skipped, failed = [], [], []
+    t_start = time.time()
+    for i, cell in enumerate(cells):
+        tag = f"[plan {plan.name}] cell {i + 1}/{len(cells)} {cell['key']}"
+        if store.completed(cell["key"], cell["hash"]):
+            skipped.append(cell["key"])
+            log(f"{tag}: complete, skipping (hash {cell['hash']})")
+            continue
+        t0 = time.time()
+        try:
+            result = executor(cell)
+        except Exception as e:
+            failed.append(cell["key"])
+            log(f"{tag}: FAILED after {time.time() - t0:.1f}s: "
+                f"{str(e)[:500]}")
+            continue
+        record = dict(key=cell["key"], hash=cell["hash"], cell=cell,
+                      env=env, result=result,
+                      elapsed_s=round(time.time() - t0, 3))
+        store.save_cell(record)
+        executed.append(cell["key"])
+        log(f"{tag}: done in {record['elapsed_s']}s "
+            f"(wall {result.get('wall_s')}s, "
+            f"sig {str(result.get('raster_sig'))[:16]})")
+
+    summary = dict(plan=plan.name, total=len(cells),
+                   executed=len(executed), skipped=len(skipped),
+                   failed=len(failed), excluded=len(excluded),
+                   executed_keys=executed, skipped_keys=skipped,
+                   failed_keys=failed,
+                   wall_s=round(time.time() - t_start, 3),
+                   ok=not failed and not (assert_complete and executed))
+    store.save_summary(summary)
+    log(f"[plan {plan.name}] PLAN_SUMMARY " + json.dumps(
+        {k: summary[k] for k in ("plan", "total", "executed", "skipped",
+                                 "failed", "excluded", "ok")}))
+    if assert_complete and executed:
+        log(f"[plan {plan.name}] --assert-complete: {len(executed)} "
+            f"cell(s) had to execute — resume did NOT cover the plan")
+    _summary.append(_summary_markdown(plan, summary, excluded))
+    return summary
+
+
+def _summary_markdown(plan: Plan, summary: dict,
+                      excluded: List[dict]) -> str:
+    """Runner summary for the PR checks page ($GITHUB_STEP_SUMMARY)."""
+    lines = [f"### experiment plan `{plan.name}`",
+             "",
+             f"| total | executed | skipped | failed | excluded |",
+             f"|---|---|---|---|---|",
+             f"| {summary['total']} | {summary['executed']} | "
+             f"{summary['skipped']} | {summary['failed']} | "
+             f"{summary['excluded']} |",
+             ""]
+    if summary["failed_keys"]:
+        lines.append("failed cells: " + ", ".join(
+            f"`{k}`" for k in summary["failed_keys"]))
+    status = "resumed clean" if summary["executed"] == 0 else (
+        f"{summary['executed']} executed")
+    lines.append(f"outcome: **{'OK' if summary['ok'] else 'FAIL'}** "
+                 f"({status}, {summary['wall_s']}s)")
+    return "\n".join(lines)

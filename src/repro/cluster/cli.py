@@ -46,6 +46,33 @@ def run_point(args, nprocs: int, timeout: float = 900.0) -> dict:
     return crep.summarize_point(crep.parse_worker_outputs(outputs))
 
 
+def run_plan_cell(cell: dict, timeout=None) -> dict:
+    """Plan-driven sweep entry: one expanded experiment-plan cell
+    (repro.bench.plans) as a real multi-process launch.  Maps the cell's
+    axis values onto the worker workload contract and returns the
+    aggregated scaling row (wall, per-phase maxima, raster signature) —
+    the same shape `sweep` points carry, so plan results and
+    BENCH_cluster_scaling history stay directly comparable."""
+    args = workload_namespace(
+        grid=cell["grid"],
+        neurons_per_column=cell["neurons_per_column"],
+        synapses=cell["synapses_per_neuron"],
+        seed=cell["seed"],
+        steps=cell["steps"],
+        phase_steps=cell["phase_steps"],
+        shards=cell["shards"],
+        exchange=cell["exchange"],
+        exchange_schedule=cell["exchange_schedule"],
+        placement=cell["placement"],
+        delivery=cell["delivery"],
+        profile=cell["profile"],
+        stim_events=cell["stim_events"],
+        stim_amplitude=cell["stim_amplitude"])
+    from ..bench import subproc
+    return run_point(args, cell["nprocs"],
+                     timeout=subproc.resolve_timeout(timeout))
+
+
 def reference_signature(args) -> str:
     """Raster signature from the single-process vmap engine for the same
     (seed, grid) config — the ground truth `run --verify` compares with.
@@ -59,7 +86,11 @@ def reference_signature(args) -> str:
     cfg = GridConfig(grid_x=gx, grid_y=gy,
                      neurons_per_column=args.neurons_per_column,
                      synapses_per_neuron=args.synapses, seed=args.seed,
-                     connectivity=getattr(args, "profile", "ring3"))
+                     connectivity=getattr(args, "profile", "ring3"),
+                     stim_events_per_ms_per_column=getattr(
+                         args, "stim_events", 1),
+                     stim_amplitude=getattr(args, "stim_amplitude",
+                                            20.0))
     eng = EngineConfig(n_shards=args.shards, exchange=args.exchange,
                        placement=args.placement,
                        delivery=getattr(args, "delivery", "dense"))

@@ -50,6 +50,11 @@ def add_workload_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--profile", default="ring3",
                     help="lateral-connectivity profile spec "
                          "(repro.core.profiles)")
+    ap.add_argument("--stim-events", type=int, default=1,
+                    help="thalamic events per ms per column "
+                         "(GridConfig.stim_events_per_ms_per_column)")
+    ap.add_argument("--stim-amplitude", type=float, default=20.0,
+                    help="thalamic event amplitude in mV")
     ap.add_argument("--phase-steps", type=int, default=0,
                     help="extra phase-split steps for per-phase timings "
                          "(0 = skip)")
@@ -73,6 +78,9 @@ def workload_argv(args) -> list:
             "--placement", args.placement,
             "--delivery", getattr(args, "delivery", "dense"),
             "--profile", args.profile,
+            "--stim-events", str(getattr(args, "stim_events", 1)),
+            "--stim-amplitude", str(getattr(args, "stim_amplitude",
+                                            20.0)),
             "--phase-steps", str(args.phase_steps)]
     if getattr(args, "ckpt", None):
         argv += ["--ckpt", args.ckpt]
@@ -106,7 +114,9 @@ def main(argv=None) -> int:
     cfg = GridConfig(grid_x=gx, grid_y=gy,
                      neurons_per_column=args.neurons_per_column,
                      synapses_per_neuron=args.synapses, seed=args.seed,
-                     connectivity=args.profile)
+                     connectivity=args.profile,
+                     stim_events_per_ms_per_column=args.stim_events,
+                     stim_amplitude=args.stim_amplitude)
     eng = EngineConfig(n_shards=H, exchange=args.exchange,
                        exchange_schedule=args.exchange_schedule,
                        placement=args.placement, delivery=args.delivery)
@@ -133,6 +143,7 @@ def main(argv=None) -> int:
         exchange=args.exchange, placement=args.placement,
         exchange_schedule=args.exchange_schedule,
         delivery=args.delivery, profile=args.profile,
+        stim_events=args.stim_events,
         tuned_env=os.environ.get("REPRO_TUNED_ENV", "") == "1",
         local_devices=jax.local_device_count(),
         wall_s=round(wall_s, 4),

@@ -1,0 +1,101 @@
+"""Static dashboard generation (repro.bench.plans.dashboard).
+
+The dashboard must render from `file://` anywhere — inline SVG, no
+scripts, no network fetches — and chart the committed BENCH_*.json
+history (one figure per suite) next to the plan's own sections.
+"""
+import os
+
+from repro.bench import plans
+from repro.bench import report as bench_report
+from repro.bench.plans import dashboard as dash
+
+ENV = {"jax": "0.4.37", "backend": "cpu"}
+BASELINES = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                         "baselines")
+
+
+def _records(sig="ab" * 32, sig_for=None):
+    doc = dict(name="unit",
+               workload=dict(neurons_per_column=30, synapses_per_neuron=12,
+                             steps=20, phase_steps=5, seed=7),
+               axes=dict(delivery=["dense"], exchange=["halo"],
+                         exchange_schedule=["sync", "pipelined"],
+                         shards=[2], nprocs=[1, 2]))
+    plan = plans.validate(doc)
+    cells, _ = plans.expand(plan, env=ENV)
+    recs = []
+    for c in cells:
+        s = (sig_for or {}).get(c["key"], sig)
+        exch = 0.1 if c["exchange_schedule"] == "sync" else 0.04
+        recs.append(dict(
+            key=c["key"], hash=c["hash"], cell=c, elapsed_s=1.0,
+            result=dict(wall_s=0.5 * c["nprocs"], spikes=10, rate_hz=1.0,
+                        raster_sig=s, phase_a_s=0.2, exchange_s=exch,
+                        phase_b_s=0.2, phase_steps=5,
+                        time_per_syn_event_s=4.2e-3)))
+    return plan.to_config(), recs
+
+
+class TestRender:
+    def test_self_contained_html(self):
+        cfg, recs = _records()
+        html = dash.render(cfg, recs)
+        assert html.startswith("<!DOCTYPE html>")
+        assert "<svg" in html and "<script" not in html
+        assert "http://" not in html and "https://" not in html
+
+    def test_plan_sections_present(self):
+        cfg, recs = _records()
+        html = dash.render(cfg, recs)
+        assert "Scaling over nprocs" in html
+        assert "Per-phase split" in html
+        assert "Hidden exchange fraction" in html
+        assert "Time per synaptic event" in html
+        assert "Table 1 invariant" in html and "identical" in html
+
+    def test_divergent_group_marked(self):
+        cfg, recs = _records()
+        bad = {recs[0]["key"]: "ff" * 32}
+        cfg, recs = _records(sig_for=bad)
+        html = dash.render(cfg, recs)
+        assert "DIVERGED" in html
+
+    def test_phase_colors_use_fixed_slots(self):
+        cfg, recs = _records()
+        html = dash.render(cfg, recs)
+        # phase A / exchange / B always wear categorical slots 1/2/3
+        for slot in ("--s1", "--s2", "--s3"):
+            assert f"var({slot})" in html
+        assert "prefers-color-scheme" in html
+
+    def test_summary_line_rendered(self):
+        cfg, recs = _records()
+        html = dash.render(cfg, recs,
+                           summary=dict(executed=4, skipped=0, failed=0))
+        assert "4 executed" in html
+
+    def test_write_creates_file(self, tmp_path):
+        cfg, recs = _records()
+        path = dash.write(str(tmp_path / "dashboard.html"), cfg, recs)
+        assert os.path.getsize(path) > 1000
+
+
+class TestHistory:
+    def test_one_chart_per_committed_suite(self):
+        history = bench_report.load_dir(BASELINES)
+        assert history, "committed benchmarks/baselines disappeared?"
+        cfg, recs = _records()
+        html = dash.render(cfg, recs, history=history)
+        assert html.count("<figcaption><strong>BENCH ") == len(history)
+        for name in history:
+            assert f"BENCH {name}" in html
+        assert "http://" not in html and "https://" not in html
+
+    def test_wall_metric_overflow_is_declared(self):
+        wall = {f"m{i:02d}_wall_s": 0.1 + i / 100 for i in range(30)}
+        rep = bench_report.make_report("wide", dict(quick=True),
+                                      dict(sig="ab"), wall)
+        html = dash.history_section({"wide": rep})
+        assert "first 24 of 30 wall metrics shown" in html
+        assert html.count("<rect") == 24

@@ -1,0 +1,177 @@
+"""Resumable plan execution + merged BENCH report (repro.bench.plans).
+
+Resume semantics are the contract CI leans on: a completed cell is never
+re-executed, a deleted or stale result re-runs exactly that cell, a
+failed cell leaves no file (so the next run retries it) and
+`assert_complete` turns "anything executed" into a failure — the proof
+the experiment-plan job replays on the committed quick plan.
+"""
+import pytest
+
+from repro.bench import plans
+from repro.bench import report as bench_report
+from repro.bench.plans import runner as RU
+
+ENV = {"jax": "0.4.37", "backend": "cpu"}
+SIG = "ab" * 32
+
+
+def _plan(**over):
+    doc = dict(name="unit",
+               workload=dict(neurons_per_column=30, synapses_per_neuron=12,
+                             steps=20, phase_steps=5, seed=7),
+               axes=dict(delivery=["dense", "event"], exchange=["halo"],
+                         shards=[2]))
+    doc.update(over)
+    return plans.validate(doc)
+
+
+def _executor(calls=None, sig=SIG, fail_keys=()):
+    def run(cell):
+        if calls is not None:
+            calls.append(cell["key"])
+        if cell["key"] in fail_keys:
+            raise RuntimeError("injected cell failure")
+        res = dict(wall_s=0.5, spikes=10, rate_hz=1.0, raster_sig=sig,
+                   phase_a_s=0.2, exchange_s=0.1, phase_b_s=0.2,
+                   phase_steps=cell["phase_steps"])
+        if cell["delivery"] == "event":
+            res["saturated"] = 0
+        return RU._finalize(cell, res)
+    return run
+
+
+def _run(plan, out, **kw):
+    kw.setdefault("env", ENV)
+    kw.setdefault("log", lambda m: None)
+    return plans.run_plan(plan, str(out), **kw)
+
+
+class TestResume:
+    def test_first_run_executes_everything(self, tmp_path):
+        calls = []
+        s = _run(_plan(), tmp_path, executor=_executor(calls))
+        assert (s["executed"], s["skipped"], s["failed"]) == (2, 0, 0)
+        assert s["ok"] and len(calls) == 2
+        store = plans.ResultStore(str(tmp_path), "unit")
+        assert len(store.load_results()) == 2
+
+    def test_second_run_executes_nothing(self, tmp_path):
+        _run(_plan(), tmp_path, executor=_executor())
+        calls = []
+        s = _run(_plan(), tmp_path, executor=_executor(calls),
+                 assert_complete=True)
+        assert s["ok"] and s["executed"] == 0 and s["skipped"] == 2
+        assert calls == []
+
+    def test_deleted_cell_is_the_only_rerun(self, tmp_path):
+        s0 = _run(_plan(), tmp_path, executor=_executor())
+        victim = s0["executed_keys"][0]
+        store = plans.ResultStore(str(tmp_path), "unit")
+        assert store.drop_cell(victim)
+        calls = []
+        s = _run(_plan(), tmp_path, executor=_executor(calls))
+        assert calls == [victim]
+        assert s["executed_keys"] == [victim] and s["skipped"] == 1
+
+    def test_stale_hash_reruns_the_cell(self, tmp_path):
+        _run(_plan(), tmp_path, executor=_executor())
+        calls = []
+        s = _run(_plan(), tmp_path, executor=_executor(calls),
+                 env={"jax": "9.9.9", "backend": "cpu"})
+        assert s["executed"] == 2 and len(calls) == 2
+
+    def test_assert_complete_fails_when_work_remained(self, tmp_path):
+        s = _run(_plan(), tmp_path, executor=_executor(),
+                 assert_complete=True)
+        assert s["executed"] == 2 and not s["ok"]
+
+    def test_failed_cell_leaves_no_file_and_retries(self, tmp_path):
+        p = _plan()
+        cells, _ = plans.expand(p, env=ENV)
+        bad = cells[0]["key"]
+        s = _run(p, tmp_path, executor=_executor(fail_keys={bad}))
+        assert not s["ok"] and s["failed_keys"] == [bad]
+        assert s["executed"] == 1          # the other cell still ran
+        store = plans.ResultStore(str(tmp_path), "unit")
+        assert store.load_cell(bad) is None
+        calls = []
+        s2 = _run(p, tmp_path, executor=_executor(calls))
+        assert calls == [bad] and s2["ok"]
+
+    def test_summary_is_persisted(self, tmp_path):
+        s = _run(_plan(), tmp_path, executor=_executor())
+        store = plans.ResultStore(str(tmp_path), "unit")
+        assert store.load_summary()["executed"] == s["executed"]
+
+
+class TestMergedReport:
+    def test_report_validates_and_gates_identity(self, tmp_path):
+        _run(_plan(), tmp_path, executor=_executor())
+        path, rep = plans.write_report(_plan(), str(tmp_path), env=ENV)
+        assert bench_report.validate(rep) == []
+        det = rep["deterministic"]
+        spikes = [k for k in det if k.endswith("_spikes")]
+        sigs = [k for k in det if k.endswith("_sig")]
+        idents = [k for k in det if k.startswith("identical_")]
+        assert len(spikes) == len(sigs) == 2 and len(idents) == 1
+        assert det[idents[0]] is True
+        assert any(k.endswith("_wall_s") for k in rep["wall"])
+        assert any(k.endswith("_exchange_s") for k in rep["wall"])
+
+    def test_divergent_raster_flags_group(self, tmp_path):
+        p = _plan()
+        cells, _ = plans.expand(p, env=ENV)
+        flip = cells[1]["key"]
+
+        def run(cell):
+            sig = "ff" * 32 if cell["key"] == flip else SIG
+            return _executor(sig=sig)(cell)
+
+        _run(p, tmp_path, executor=run)
+        _, rep = plans.write_report(p, str(tmp_path), env=ENV)
+        ident = [k for k in rep["deterministic"]
+                 if k.startswith("identical_")]
+        assert rep["deterministic"][ident[0]] is False
+        assert any(not g["identical"]
+                   for g in rep["extra"]["groups"].values())
+
+    def test_partial_store_is_refused_without_flag(self, tmp_path):
+        p = _plan()
+        _run(p, tmp_path, executor=_executor())
+        store = plans.ResultStore(str(tmp_path), "unit")
+        store.drop_cell(store.load_results()[0]["key"])
+        with pytest.raises(plans.PlanError):
+            plans.write_report(p, str(tmp_path), env=ENV)
+        _, rep = plans.write_report(p, str(tmp_path), allow_partial=True,
+                                    env=ENV)
+        assert len(rep["extra"]["cells"]) == 1
+
+    def test_time_per_syn_event_derived(self, tmp_path):
+        _run(_plan(), tmp_path, executor=_executor())
+        store = plans.ResultStore(str(tmp_path), "unit")
+        for rec in store.load_results():
+            res = rec["result"]
+            expect = res["wall_s"] / (res["spikes"] *
+                                      rec["cell"]["synapses_per_neuron"])
+            assert res["time_per_syn_event_s"] == pytest.approx(expect,
+                                                                rel=1e-2)
+
+
+@pytest.mark.slow
+class TestRealSubprocess:
+    def test_single_cell_plan_runs_in_fresh_interpreter(self, tmp_path):
+        p = _plan(axes=dict(delivery=["dense"], exchange=["halo"],
+                            shards=[2]),
+                  workload=dict(neurons_per_column=20,
+                                synapses_per_neuron=8, steps=10,
+                                phase_steps=4, seed=7))
+        s = plans.run_plan(p, str(tmp_path), log=lambda m: None)
+        assert s["ok"] and s["executed"] == 1
+        rec = plans.ResultStore(str(tmp_path), "unit").load_results()[0]
+        res = rec["result"]
+        assert res["spikes"] > 0 and len(res["raster_sig"]) == 64
+        assert res["phase_steps"] == 4 and "exchange_s" in res
+        s2 = plans.run_plan(p, str(tmp_path), assert_complete=True,
+                            log=lambda m: None)
+        assert s2["ok"] and s2["executed"] == 0

@@ -1,0 +1,200 @@
+"""Experiment-plan schema + expansion (repro.bench.plans).
+
+A plan file is reviewed config: validation must be strict (typos fail
+loudly, every problem reported at once), expansion must never silently
+shrink (every dropped cell carries a reason), and the resume fingerprint
+must move exactly when the physics or the code-relevant environment
+moves.
+"""
+import json
+import os
+
+import pytest
+
+from repro.bench import plans
+from repro.bench.plans import schema as S
+
+ENV = {"jax": "0.4.37", "backend": "cpu"}
+PLANS_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                         "plans")
+
+
+def _doc(**over):
+    doc = dict(name="unit",
+               workload=dict(neurons_per_column=30, synapses_per_neuron=12,
+                             steps=20, seed=7),
+               axes=dict(delivery=["dense", "event"], shards=[2]))
+    doc.update(over)
+    return doc
+
+
+class TestValidate:
+    def test_defaults_fill_unset_knobs(self):
+        p = plans.validate(_doc())
+        assert p.axes["placement"] == ["block"]
+        assert p.axes["stim"] == ["default"]
+        assert p.workload["phase_steps"] == 0
+        assert p.budgets == dict(S.BUDGET_DEFAULTS)
+
+    def test_all_errors_reported_at_once(self):
+        doc = _doc(bogus=1, axes=dict(delivery=["dens"], warp=[1]),
+                   workload=dict(steps=-1, nope=2))
+        with pytest.raises(plans.PlanError) as ei:
+            plans.validate(doc)
+        text = str(ei.value)
+        for frag in ("bogus", "dens", "warp", "steps", "nope"):
+            assert frag in text, f"{frag!r} missing from: {text}"
+
+    @pytest.mark.parametrize("axes", [
+        dict(delivery=["dense", "sparse"]),
+        dict(exchange=["ring"]),
+        dict(exchange_schedule=["eager"]),
+        dict(stim=["loud"]),
+        dict(grid=["2x"]),
+        dict(grid=["0x2"]),
+        dict(shards=[0]),
+        dict(shards=[True]),
+        dict(nprocs=["2"]),
+        dict(profile=["definitely-not-a-profile"]),
+    ])
+    def test_out_of_domain_axis_value_rejected(self, axes):
+        with pytest.raises(plans.PlanError):
+            plans.validate(_doc(axes=axes))
+
+    def test_duplicate_axis_value_rejected(self):
+        with pytest.raises(plans.PlanError) as ei:
+            plans.validate(_doc(axes=dict(delivery=["dense", "dense"])))
+        assert "duplicate" in str(ei.value)
+
+    def test_bad_name_rejected(self):
+        with pytest.raises(plans.PlanError):
+            plans.validate(_doc(name="no spaces allowed"))
+
+    def test_exclude_unknown_axis_rejected(self):
+        with pytest.raises(plans.PlanError):
+            plans.validate(_doc(exclude=[{"warp": 2}]))
+
+    def test_exclude_bad_value_rejected(self):
+        with pytest.raises(plans.PlanError):
+            plans.validate(_doc(exclude=[{"delivery": "sparse"}]))
+
+    @pytest.mark.parametrize("budgets", [
+        dict(reps=0), dict(timeout_s=-5), dict(gpu_hours=1)])
+    def test_bad_budgets_rejected(self, budgets):
+        with pytest.raises(plans.PlanError):
+            plans.validate(_doc(budgets=budgets))
+
+
+class TestExpand:
+    def test_cells_carry_key_hash_and_group(self):
+        cells, excluded = plans.expand(plans.validate(_doc()), env=ENV)
+        assert len(cells) == 2 and not excluded
+        for c in cells:
+            assert c["key"] and len(c["hash"]) == 16
+            assert c["physics_group"] == cells[0]["physics_group"]
+
+    def test_structural_shards_divisibility(self):
+        p = plans.validate(_doc(axes=dict(shards=[2], nprocs=[1, 3])))
+        cells, excluded = plans.expand(p, env=ENV)
+        assert [c["nprocs"] for c in cells] == [1]
+        assert len(excluded) == 1
+        assert "divisible" in excluded[0]["reason"]
+
+    def test_structural_hier_needs_processes(self):
+        p = plans.validate(_doc(axes=dict(exchange=["halo", "hier"],
+                                          shards=[2], nprocs=[1, 2])))
+        cells, excluded = plans.expand(p, env=ENV)
+        hier = [c for c in cells if c["exchange"] == "hier"]
+        assert hier and all(c["nprocs"] >= 2 for c in hier)
+        assert any("hier" in e["reason"] for e in excluded)
+
+    def test_user_exclude_drops_with_reason(self):
+        p = plans.validate(_doc(exclude=[{"delivery": "event"}]))
+        cells, excluded = plans.expand(p, env=ENV)
+        assert [c["delivery"] for c in cells] == ["dense"]
+        assert "excluded by" in excluded[0]["reason"]
+
+    def test_everything_excluded_is_an_error(self):
+        p = plans.validate(_doc(exclude=[{"delivery": ["dense", "event"]}]))
+        with pytest.raises(plans.PlanError) as ei:
+            plans.expand(p, env=ENV)
+        assert "zero cells" in str(ei.value)
+
+    def test_duplicate_cells_are_an_error(self):
+        # bypass validate (which already catches duplicate axis values) to
+        # prove expansion itself refuses colliding keys/hashes
+        p = plans.validate(_doc())
+        axes = {a: list(v) for a, v in p.axes.items()}
+        axes["delivery"] = ["dense", "dense"]
+        dup = S.Plan(name=p.name, workload=p.workload, axes=axes,
+                     exclude=(), budgets=p.budgets)
+        with pytest.raises(plans.PlanError) as ei:
+            plans.expand(dup, env=ENV)
+        assert "duplicate" in str(ei.value)
+
+
+class TestFingerprint:
+    def _cell(self, **over):
+        doc = _doc(axes=dict(delivery=["dense"], shards=[2]))
+        doc.update(over)
+        cells, _ = plans.expand(plans.validate(doc), env=ENV)
+        return cells[0]
+
+    def test_env_change_moves_hash(self):
+        c = self._cell()
+        assert plans.cell_hash(c, ENV) != plans.cell_hash(
+            c, {"jax": "9.9.9", "backend": "cpu"})
+
+    def test_physics_change_moves_hash_and_group(self):
+        a = self._cell()
+        b = self._cell(workload=dict(neurons_per_column=30,
+                                     synapses_per_neuron=12, steps=20,
+                                     seed=8))
+        assert a["hash"] != b["hash"]
+        assert a["physics_group"] != b["physics_group"]
+
+    def test_budget_timeout_does_not_move_hash(self):
+        a = self._cell()
+        b = self._cell(budgets=dict(timeout_s=123))
+        assert a["hash"] == b["hash"]
+
+    def test_layout_shares_physics_group(self):
+        doc = _doc(axes=dict(delivery=["dense", "event"],
+                             exchange=["halo", "allgather"], shards=[1, 2]))
+        cells, _ = plans.expand(plans.validate(doc), env=ENV)
+        assert len({c["physics_group"] for c in cells}) == 1
+        assert len({c["hash"] for c in cells}) == len(cells)
+
+
+class TestLoad:
+    def test_json_plan_loads(self, tmp_path):
+        path = tmp_path / "p.json"
+        path.write_text(json.dumps(_doc()))
+        assert plans.load(str(path)).name == "unit"
+
+    def test_yaml_plan_loads_with_filename_hint(self, tmp_path):
+        pytest.importorskip("yaml")
+        path = tmp_path / "hinted.yaml"
+        path.write_text("workload: {steps: 10}\n"
+                        "axes: {delivery: [dense]}\n")
+        p = plans.load(str(path))
+        assert p.name == "hinted" and p.workload["steps"] == 10
+
+    def test_missing_file_is_a_plan_error(self):
+        with pytest.raises(plans.PlanError):
+            plans.load("/nonexistent/plan.yaml")
+
+    @pytest.mark.parametrize("fname,n_cells", [
+        ("quick.yaml", 10), ("paper_scaling.yaml", 36)])
+    def test_committed_plans_load_and_expand(self, fname, n_cells):
+        pytest.importorskip("yaml")
+        p = plans.load(os.path.join(PLANS_DIR, fname))
+        cells, excluded = plans.expand(p, env=ENV)
+        assert len(cells) == n_cells
+        assert all(e["reason"] for e in excluded)
+
+    def test_committed_quick_is_one_physics_group(self):
+        pytest.importorskip("yaml")
+        p = plans.load(os.path.join(PLANS_DIR, "quick.yaml"))
+        cells, _ = plans.expand(p, env=ENV)
+        assert len({c["physics_group"] for c in cells}) == 1
