@@ -122,11 +122,14 @@ def _cmd_plan(args) -> int:
     from .plans import dashboard as dash
     records = rep["extra"]["cells"]
     history = report.load_dir(args.history) if args.history else {}
+    prior = plans.load_plan_history(args.plan_history, plan.name)
     html_path = dash.write(
         f"{store.root}/dashboard.html", plan.to_config(), records,
-        history=history, summary=store.load_summary())
+        history=history, summary=store.load_summary(),
+        prior_reports=prior)
     print(f"[plan {plan.name}] wrote {html_path} "
-          f"({len(records)} cells, {len(history)} history suites)")
+          f"({len(records)} cells, {len(history)} history suites, "
+          f"{len(prior)} prior plan runs)")
 
     bad = [g for g, d in rep["extra"]["groups"].items()
            if not d["identical"]]
@@ -193,6 +196,10 @@ def main(argv=None) -> int:
     q.add_argument("--history", default=DEFAULT_BASELINES,
                    help=f"BENCH_*.json history charted in the dashboard "
                         f"(default {DEFAULT_BASELINES}; '' disables)")
+    q.add_argument("--plan-history", default=f"{DEFAULT_BASELINES}/plans",
+                   help="dir of prior BENCH_plan_<name>.json runs for "
+                        "the plan-over-plan wall chart (default "
+                        f"{DEFAULT_BASELINES}/plans; '' disables)")
     q.add_argument("--partial", action="store_true",
                    help="report over an incomplete store (missing cells "
                         "are simply absent)")

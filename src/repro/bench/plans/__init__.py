@@ -23,7 +23,7 @@ from .schema import Plan, PlanError, load, validate
 from .expand import cell_hash, cell_key, expand, physics_group
 from .store import ResultStore
 from .runner import run_plan
-from .reporting import merged_report, write_report
+from .reporting import load_plan_history, merged_report, write_report
 
 __all__ = [
     "Plan", "PlanError", "load", "validate",

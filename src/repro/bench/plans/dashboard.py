@@ -10,6 +10,9 @@ Sections (each only when its data exists):
   scaling curves       wall vs shards / processes / grid columns, one
                        line per execution variant (the paper's strong and
                        weak scaling figures);
+  plan-over-plan       each cell's fused wall across prior runs of this
+                       plan (archived BENCH_plan_<name>.json reports) —
+                       regression drift at a glance;
   per-phase split      stacked A / exchange / B bars per cell (Table 2);
   hidden exchange      sync-vs-pipelined exposed-exchange reduction for
                        cell pairs differing only in schedule;
@@ -408,6 +411,46 @@ def identity_section(records: List[dict]) -> str:
             "layout</p><ul>" + "".join(items) + "</ul>")
 
 
+def plan_history_section(prior: Sequence[Tuple[str, dict]],
+                         records: List[dict]) -> str:
+    """Plan-over-plan: each cell's fused wall charted across prior runs
+    of THIS plan (committed/archived BENCH_plan_<name>.json reports) plus
+    the current store — regression drift per cell at a glance."""
+    runs: List[Tuple[str, Dict[str, float]]] = []
+    for label, rep in prior:
+        walls = {k[:-len("_wall_s")]: float(v)
+                 for k, v in rep.get("wall", {}).items()
+                 if k.endswith("_wall_s") and isinstance(v, (int, float))}
+        if walls:
+            runs.append((label, walls))
+    cur = {rec["key"]: float(rec["result"]["wall_s"])
+           for rec in records if "wall_s" in rec["result"]}
+    if cur:
+        runs.append(("current", cur))
+    if len(runs) < 2:
+        return ""
+    cells = sorted({c for _, walls in runs for c in walls})
+    series = []
+    for c in cells:
+        pts = [(float(i), walls[c]) for i, (_, walls) in enumerate(runs)
+               if c in walls]
+        if len(pts) >= 2:
+            series.append((c, pts))
+    if not series:
+        return ""
+    shown = series[:_SLOTS]
+    folded = len(series) - len(shown)
+    legend = _legend([(lbl, _slot(i)) for i, (lbl, _) in
+                      enumerate(shown)] +
+                     ([(f"other ({folded})", "var(--muted)")]
+                      if folded else []))
+    run_key = "; ".join(f"{i}={lbl}" for i, (lbl, _) in enumerate(runs))
+    return _figure("Wall across plan runs",
+                   f"fused wall per cell over prior runs of this plan "
+                   f"({run_key})",
+                   legend + line_chart(series, x_label="run"))
+
+
 def history_section(history: Dict[str, dict]) -> str:
     """One wall-metric chart per committed BENCH suite report."""
     out = []
@@ -435,7 +478,9 @@ def history_section(history: Dict[str, dict]) -> str:
 
 def render(plan_config: dict, records: List[dict],
            history: Optional[Dict[str, dict]] = None,
-           summary: Optional[dict] = None) -> str:
+           summary: Optional[dict] = None,
+           prior_reports: Optional[Sequence[Tuple[str, dict]]] = None
+           ) -> str:
     """Full dashboard HTML (self-contained, inline-SVG, no scripts)."""
     name = plan_config.get("name", "plan")
     n_axes = {a: len(v) for a, v in plan_config.get("axes", {}).items()
@@ -450,6 +495,7 @@ def render(plan_config: dict, records: List[dict],
         f"<h1>Experiment plan: {_e(name)}</h1>",
         f"<p class='sub'>{_e(sub)}</p>",
         scaling_section(records),
+        plan_history_section(prior_reports or (), records),
         phase_section(records),
         hidden_exchange_section(records),
         time_per_event_section(records),
@@ -465,8 +511,10 @@ def render(plan_config: dict, records: List[dict],
 
 def write(path: str, plan_config: dict, records: List[dict],
           history: Optional[Dict[str, dict]] = None,
-          summary: Optional[dict] = None) -> str:
+          summary: Optional[dict] = None,
+          prior_reports: Optional[Sequence[Tuple[str, dict]]] = None
+          ) -> str:
     with open(path, "w") as f:
         f.write(render(plan_config, records, history=history,
-                       summary=summary))
+                       summary=summary, prior_reports=prior_reports))
     return path

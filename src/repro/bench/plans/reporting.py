@@ -99,6 +99,25 @@ def merged_report(plan: Plan, records: List[dict],
                                     deterministic, wall, extra=extra)
 
 
+def load_plan_history(d: str, plan_name: str) -> List[Tuple[str, dict]]:
+    """Prior merged reports of THIS plan, in filename order: every
+    `BENCH_*.json` under `d` whose report name is `plan_<plan_name>`
+    (committed baselines and archived runs alike).  Feeds the dashboard's
+    plan-over-plan section — one (label, report) per prior run."""
+    import os
+
+    out: List[Tuple[str, dict]] = []
+    if not d or not os.path.isdir(d):
+        return out
+    for fn in sorted(os.listdir(d)):
+        if not (fn.startswith("BENCH_") and fn.endswith(".json")):
+            continue
+        rep = bench_report.load(os.path.join(d, fn))
+        if rep.get("name") == f"plan_{plan_name}":
+            out.append((fn[len("BENCH_"):-len(".json")], rep))
+    return out
+
+
 def write_report(plan: Plan, out_root: str, *,
                  allow_partial: bool = False,
                  env: Optional[dict] = None) -> Tuple[str, dict]:

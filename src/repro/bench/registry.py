@@ -64,6 +64,11 @@ def _connectivity_sweep(quick):
     return connectivity_sweep.run_suite(quick)
 
 
+def _simserve_throughput(quick):
+    from .suites import simserve_throughput
+    return simserve_throughput.run_suite(quick)
+
+
 def _cluster_scaling(quick):
     from ..cluster import cli as cluster_cli
     return cluster_cli.sweep_report(quick=quick)
@@ -87,6 +92,9 @@ BENCHES: Dict[str, Entry] = {e.name: e for e in [
           "(ring/Gaussian/exponential; arXiv:1803.08833)"),
     Entry("lm_throughput", _lm_throughput,
           "LM substrate train/decode tokens/s (CPU micro-benchmark)"),
+    Entry("simserve_throughput", _simserve_throughput,
+          "multi-tenant service aggregate steps/s + time/syn-event at "
+          "1/4/8 tenants, zero-recompile gated (repro.simserve)"),
     Entry("roofline", _roofline,
           "three-term roofline table from results/dryrun (analytic)"),
     Entry("scaling", _scaling,

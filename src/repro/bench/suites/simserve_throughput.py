@@ -1,0 +1,77 @@
+"""Multi-tenant service throughput: `repro.simserve` at 1 / 4 / 8
+tenants on one shape key.
+
+The service's value proposition is that same-shape tenants share one
+jitted round program on a free leading batch axis, so aggregate
+steps/s should grow with tenant count until the vmap stops vectorizing
+profitably.  Each cell submits N same-shape tenants (seeds differ —
+exactly what the shape key ignores), drives the service to completion,
+and reports
+
+  wall           aggregate tenant-steps/s, fused wall, and the paper's
+                 normalized time-per-synaptic-event (service wall /
+                 (total spikes x synapses per neuron)) per tenant count;
+  deterministic  one combined signature per tenant count (sha256 over
+                 the per-tenant streamed raster signatures, which are
+                 each bit-identical to solo runs — the service
+                 correctness spine as gateable data) plus the program
+                 cache's build and trace counts (the zero-recompile
+                 criterion: 1 build, 1 trace regardless of N).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+from repro.core import EngineConfig, GridConfig
+from repro.simserve import SimService, TenantRequest
+from .. import report as R
+
+TENANT_COUNTS = (1, 4, 8)
+
+
+def _run_cell(n_tenants: int, steps: int, round_steps: int) -> dict:
+    cfg0 = GridConfig(grid_x=2, grid_y=2, neurons_per_column=20,
+                      synapses_per_neuron=10)
+    eng = EngineConfig(n_shards=2, delivery="dense")
+    svc = SimService(slots=n_tenants, round_steps=round_steps)
+    reqs = [TenantRequest(f"t{i}", dataclasses.replace(
+        cfg0, seed=2013 + 7919 * i), eng, steps)
+        for i in range(n_tenants)]
+    for r in reqs:
+        svc.submit(r)
+    snap = svc.run()
+
+    sigs = [svc.sessions[r.name].stream.signature() for r in reqs]
+    combined = hashlib.sha256(b"".join(sigs)).hexdigest()[:16]
+    spikes = sum(svc.sessions[r.name].spike_total for r in reqs)
+    syn_events = spikes * cfg0.synapses_per_neuron
+    wall = snap["wall_s"]
+    return dict(
+        tenants=n_tenants, steps=steps, spikes=spikes,
+        wall_s=round(wall, 4),
+        steps_per_s=int(snap["tenant_steps_per_s"]),
+        time_per_syn_event_s=wall / max(syn_events, 1),
+        sig=combined,
+        cache_builds=snap["program_cache"]["builds"],
+        traces=sum(snap["program_cache"]["traces"].values()))
+
+
+def run_suite(quick: bool = False) -> dict:
+    steps, round_steps = (40, 10) if quick else (100, 20)
+    deterministic, wall, rows = {}, {}, []
+    for n in TENANT_COUNTS:
+        row = _run_cell(n, steps, round_steps)
+        rows.append(row)
+        print("[simserve]", json.dumps(row), flush=True)
+        deterministic[f"t{n}_sig"] = row["sig"]
+        deterministic[f"t{n}_cache_builds"] = row["cache_builds"]
+        deterministic[f"t{n}_traces"] = row["traces"]
+        wall[f"t{n}_wall_s"] = row["wall_s"]
+        wall[f"t{n}_steps_per_s"] = row["steps_per_s"]
+        wall[f"t{n}_time_per_syn_event_s"] = row["time_per_syn_event_s"]
+    config = dict(quick=quick, steps=steps, round_steps=round_steps,
+                  tenants=list(TENANT_COUNTS))
+    return R.make_report("simserve_throughput", config, deterministic,
+                         wall, extra=dict(rows=rows))

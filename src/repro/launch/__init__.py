@@ -1,4 +1,5 @@
-"""Entry points: train, dryrun, snn, serve (run via `python -m`).
+"""Entry points: train, dryrun, snn, serve, simserve (run via
+`python -m`).
 
 No launcher is imported eagerly — several set environment variables that
 must precede jax initialization when run as scripts.

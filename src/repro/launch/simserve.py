@@ -1,0 +1,17 @@
+"""Simulation-service launcher: multi-tenant SNN serving.
+
+  python -m repro.launch.simserve demo
+  python -m repro.launch.simserve soak --tenants 8 --reshard
+
+Thin alias for `python -m repro.simserve` (same CLI), kept under
+`repro.launch` so every runnable entry point of the repo lives in one
+namespace; see `repro/simserve/cli.py` for the flags.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.simserve.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

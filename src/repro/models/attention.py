@@ -244,9 +244,11 @@ def attention(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
               chunk_k: int = 1024):
     """Full attention block.  Returns (y [B,T,d], new_cache or None).
 
-    cache: (k_cache, v_cache) each [B, S_max, Hkv, dh]; cache_pos: scalar
-    write offset (tokens already in cache).  kv_override: precomputed (k, v)
-    for cross-attention.
+    cache: (k_cache, v_cache) each [B, S_max, Hkv, dh]; cache_pos: write
+    offset (tokens already in cache) — a scalar when all rows advance in
+    lockstep, or [B] for per-slot serving (continuous batching: each slot
+    carries its own position).  kv_override: precomputed (k, v) for
+    cross-attention.
     """
     B, T, d = x.shape
     H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -285,15 +287,22 @@ def attention(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
     if cache is not None:
         kc, vc = cache
         S_r = kc.shape[1]
-        pw = cache_pos + jnp.arange(min(T, S_r))
+        # [..., None] keeps the scalar case a plain [Tw] vector and makes
+        # a [B] cache_pos broadcast to per-slot [B, Tw] write positions
+        pw = cache_pos[..., None] + jnp.arange(min(T, S_r))
         if T > S_r:                     # only the last S_r tokens survive
             k_w, v_w = k[:, -S_r:], v[:, -S_r:]
-            pw = cache_pos + T - S_r + jnp.arange(S_r)
+            pw = cache_pos[..., None] + T - S_r + jnp.arange(S_r)
         else:
             k_w, v_w = k, v
         slots = jnp.mod(pw, S_r)
-        kc = kc.at[:, slots].set(k_w.astype(kc.dtype))
-        vc = vc.at[:, slots].set(v_w.astype(vc.dtype))
+        if slots.ndim == 1:
+            kc = kc.at[:, slots].set(k_w.astype(kc.dtype))
+            vc = vc.at[:, slots].set(v_w.astype(vc.dtype))
+        else:                           # per-slot offsets: row b at slots[b]
+            bi = jnp.arange(B)[:, None]
+            kc = kc.at[bi, slots].set(k_w.astype(kc.dtype))
+            vc = vc.at[bi, slots].set(v_w.astype(vc.dtype))
         new_cache = (kc, vc)
         if T == 1:
             attend_from_cache = True    # decode: read the ring
@@ -306,11 +315,11 @@ def attention(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
     if attend_from_cache:
         kc, vc = new_cache
         S_r = kc.shape[1]
-        qpos = cache_pos + jnp.arange(T)
+        qpos = cache_pos[..., None] + jnp.arange(T)     # [T] or [B, T]
         last = cache_pos + T - 1
         slot_i = jnp.arange(S_r)
         # most recent absolute position stored in slot i
-        kpos = last - jnp.mod(last - slot_i, S_r)
+        kpos = last[..., None] - jnp.mod(last[..., None] - slot_i, S_r)
         out = _decode_gqa(qg, kc, vc, causal=causal, window=window,
                           softcap=cfg.softcap, scale=scale, qpos=qpos,
                           kpos=kpos)
@@ -350,22 +359,25 @@ def attention(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
 def _decode_gqa(q, k, v, *, causal, window, softcap, scale, qpos, kpos):
     """Cache read with explicit absolute position arrays (ring-aware).
 
-    qpos: [T] absolute query positions; kpos: [S] absolute position stored
-    in each cache slot (negative/stale slots masked by the causal+window
-    conditions)."""
+    qpos: [T] (or per-slot [B, T]) absolute query positions; kpos: [S]
+    (or [B, S]) absolute position stored in each cache slot
+    (negative/stale slots masked by the causal+window conditions)."""
     b, hkv, g, t, dh = q.shape
     s = k.shape[1]
     sc = jnp.einsum("bhgqd,bshd->bhgqs", q.astype(jnp.float32),
                     k.astype(jnp.float32)) * scale
     if softcap is not None:
         sc = softcap * jnp.tanh(sc / softcap)
-    qp = qpos[:, None]
-    kp = kpos[None, :]
-    mask = (kp <= qp) if causal else jnp.ones((t, s), bool)
-    mask &= kp >= 0
+    qp = qpos[..., :, None]
+    kp = kpos[..., None, :]
+    shp = jnp.broadcast_shapes(qp.shape, kp.shape)   # [T,S] or [B,T,S]
+    mask = (kp <= qp) if causal else jnp.ones(shp, bool)
+    mask = mask & (kp >= 0)
     if window is not None:
         mask &= kp > qp - window
-    sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+    if mask.ndim == 2:
+        mask = mask[None]
+    sc = jnp.where(mask[:, None, None], sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bhgqs,bshd->bhgqd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)

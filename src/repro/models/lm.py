@@ -155,10 +155,13 @@ def loss_fn(cfg: ModelConfig, params, batch, aux_weight: float = 0.01,
 
 
 def init_cache(cfg: ModelConfig, batch: int, s_max: int,
-               enc_out: Optional[jnp.ndarray] = None):
+               enc_out: Optional[jnp.ndarray] = None,
+               per_slot: bool = False):
+    """per_slot=True gives cache['pos'] shape [batch]: each slot carries
+    its own position (continuous batching with per-slot refill)."""
     caches = transformer.init_caches(cfg, batch, s_max, _dtype(cfg))
-    return {"layers": caches, "enc_out": enc_out,
-            "pos": jnp.zeros((), jnp.int32)}
+    pos = jnp.zeros((batch,) if per_slot else (), jnp.int32)
+    return {"layers": caches, "enc_out": enc_out, "pos": pos}
 
 
 def prefill(cfg: ModelConfig, params, cache, batch: Dict[str, jnp.ndarray]
@@ -191,10 +194,12 @@ def decode_step(cfg: ModelConfig, params, cache, tokens: jnp.ndarray
                 ) -> Tuple[jnp.ndarray, Any]:
     """One decode step: tokens [B, Tq] (Tq=1 usually).
 
-    Positions/cache offset come from cache['pos'].
+    Positions/cache offset come from cache['pos'] — scalar (lockstep
+    slots) or [B] (per-slot serving positions).
     """
     x = embed_tokens(cfg, params, tokens)
-    pos = cache["pos"] + jnp.arange(tokens.shape[1])
+    # scalar pos -> [Tq] (as before); per-slot [B] pos -> [B, Tq]
+    pos = cache["pos"][..., None] + jnp.arange(tokens.shape[1])
     enc_kv = _EncOut(cache["enc_out"]) if cache.get("enc_out") is not None \
         else None
     x, new_layer_caches, _ = transformer.apply_stack(

@@ -1,9 +1,15 @@
-"""Batched serving engine: continuous-batching-lite.
+"""Batched serving engine: continuous batching with per-slot refill.
 
-Requests (prompts) are packed into a fixed batch; finished slots are
-refilled from a queue between steps (static shapes: one compiled prefill fn,
-one compiled decode fn).  Prefill writes the prompt into the slot's cache
-region; decode advances all live slots together."""
+Requests (prompts) are packed into a fixed batch of decode slots; a
+finished slot is refilled from the queue immediately and INDIVIDUALLY:
+the new prompt prefills through a fresh B=1 sub-cache that is written
+back into just that slot's cache rows and position (static shapes: one
+compiled slot-prefill fn + one compiled decode fn, both reused for every
+refill).  The other slots' caches, positions and greedy sampling are
+untouched, so a live request's output is bitwise independent of refill
+traffic — asserted by tests.  Per-slot positions live in cache['pos']
+([B] int32, see `lm.init_cache(per_slot=True)`); request/output
+bookkeeping stays host-side."""
 from __future__ import annotations
 
 import dataclasses
@@ -30,53 +36,82 @@ class ServeEngine:
                  greedy: bool = True, seed: int = 0):
         self.cfg, self.params = cfg, params
         self.batch, self.s_max = batch, s_max
-        self.cache = lm.init_cache(cfg, batch, s_max)
-        # NOTE: per-slot position bookkeeping is host-side; the cache 'pos'
-        # is uniform because slots prefill in lockstep (simplification:
-        # a refill round re-prefills the whole batch).
+        self.cache = lm.init_cache(cfg, batch, s_max, per_slot=True)
         self.greedy = greedy
         self.key = jax.random.key(seed)
 
-        def _prefill(params, cache, tokens):
-            logits, cache = lm.decode_step(cfg, params, cache, tokens)
-            return logits[:, -1], cache
+        def _prefill_slot(params, cache, tokens, b):
+            # fresh B=1 sub-cache (scalar pos 0: the documented
+            # prefill-from-zero path), written back into slot b only
+            sub = lm.init_cache(cfg, 1, s_max)
+            logits, sub = lm.decode_step(cfg, params, sub, tokens)
+            # units caches are [n_units, B, ...], rem caches [B, ...]
+            wr = lambda axis: (lambda full, one:
+                               jax.lax.dynamic_update_slice_in_dim(
+                                   full, one.astype(full.dtype), b, axis))
+            layers = {
+                "units": jax.tree.map(wr(1), cache["layers"]["units"],
+                                      sub["layers"]["units"]),
+                "rem": jax.tree.map(wr(0), cache["layers"]["rem"],
+                                    sub["layers"]["rem"]),
+            }
+            pos = cache["pos"].at[b].set(sub["pos"])
+            return logits[0, -1], {"layers": layers,
+                                   "enc_out": cache.get("enc_out"),
+                                   "pos": pos}
 
         def _decode(params, cache, tok):
             logits, cache = lm.decode_step(cfg, params, cache, tok)
             return logits[:, 0], cache
 
-        self.prefill = jax.jit(_prefill)
+        self.prefill_slot = jax.jit(_prefill_slot)
         self.decode = jax.jit(_decode)
 
     def run(self, requests: List[Request]) -> List[Request]:
-        """Serve requests in rounds of `batch` (static-shape batching)."""
-        done: List[Request] = []
-        for i in range(0, len(requests), self.batch):
-            round_reqs = requests[i:i + self.batch]
-            done.extend(self._run_round(round_reqs))
-        return done
-
-    def _run_round(self, reqs: List[Request]) -> List[Request]:
+        """Serve all requests, refilling finished slots one at a time."""
+        if not requests:
+            return []
         B = self.batch
-        tmax = max(r.prompt.shape[0] for r in reqs)
-        toks = np.zeros((B, tmax), np.int32)
-        for s, r in enumerate(reqs):
-            toks[s, -r.prompt.shape[0]:] = r.prompt   # left-pad
-        self.cache = lm.init_cache(self.cfg, B, self.s_max)
-        logits, self.cache = self.prefill(self.params, self.cache,
-                                          jnp.asarray(toks))
-        n_new = max(r.max_new for r in reqs)
-        outs = []
-        tok = self._sample(logits)
-        for _ in range(n_new):
-            outs.append(np.asarray(tok))
+        queue = list(requests)
+        t_pad = max(r.prompt.shape[0] for r in requests)
+        self.cache = lm.init_cache(self.cfg, B, self.s_max, per_slot=True)
+        live: List[Optional[Request]] = [None] * B
+        gen: List[List[int]] = [[] for _ in range(B)]
+        cur = np.zeros((B, 1), np.int32)
+        while True:
+            changed = True
+            while changed:               # admit + retire until stable
+                changed = False
+                for b in range(B):
+                    if live[b] is None and queue:
+                        live[b] = queue.pop(0)
+                        gen[b] = [self._admit(b, live[b], t_pad)]
+                        cur[b, 0] = gen[b][0]
+                        changed = True
+                    r = live[b]
+                    if r is not None and len(gen[b]) >= r.max_new:
+                        r.out = np.asarray(gen[b][:r.max_new], np.int32)
+                        live[b] = None
+                        changed = True
+            if not any(r is not None for r in live):
+                break
             logits, self.cache = self.decode(self.params, self.cache,
-                                             tok[:, None])
-            tok = self._sample(logits)
-        gen = np.stack(outs, axis=1)                   # [B, n_new]
-        for s, r in enumerate(reqs):
-            r.out = gen[s, :r.max_new]
-        return reqs
+                                             jnp.asarray(cur))
+            tok = np.asarray(self._sample(logits))
+            for b in range(B):
+                if live[b] is not None:
+                    gen[b].append(int(tok[b]))
+                    cur[b, 0] = int(tok[b])
+        return requests
+
+    def _admit(self, b: int, req: Request, t_pad: int) -> int:
+        """Prefill ONLY slot b with the request's (left-padded) prompt;
+        returns the first sampled token."""
+        toks = np.zeros((1, t_pad), np.int32)
+        toks[0, -req.prompt.shape[0]:] = req.prompt
+        logit, self.cache = self.prefill_slot(
+            self.params, self.cache, jnp.asarray(toks), jnp.int32(b))
+        return int(self._sample(np.asarray(logit)[None])[0])
 
     def _sample(self, logits):
         if self.greedy:

@@ -1,0 +1,33 @@
+"""repro.simserve — multi-tenant SNN simulation-as-a-service.
+
+Many independent tenant simulations (own GridConfig incl. seed, own
+engine layout, own step budget) admitted into one process and advanced
+in lockstep rounds.  Tenants whose configs differ only by seed share ONE
+jitted round program (the seed reaches the computation exclusively
+through jit arguments: connectivity/weights in the plan, the stimulus
+PRNG key) and run stacked on a free leading batch axis — continuous-
+batching-lite, mirroring `repro.serve` for the LM side.
+
+The correctness contract, asserted in tests and the CI soak: every
+tenant's streamed raster signature is bit-identical to the same config
+run solo through `core.StepProgram`, regardless of batch companions,
+slot-refill order, or evict/resume cycles — including resumes into a
+different shard layout via the layout-free `core.checkpoint` format.
+
+    python -m repro.simserve demo     # verified mixed fleet
+    python -m repro.simserve soak     # overload + forced evict/resume
+"""
+from .batcher import (BatchGroup, CompiledRound, GroupCaps, ProgramCache,
+                      build_parts, measure_caps, negotiate, shape_key,
+                      solo_signature)
+from .metrics import ServiceMetrics
+from .queue import SimService
+from .session import (DONE, EVICTED, QUEUED, RUNNING, RasterStream,
+                      TenantRequest, TenantSession)
+
+__all__ = [
+    "BatchGroup", "CompiledRound", "GroupCaps", "ProgramCache",
+    "build_parts", "measure_caps", "negotiate", "shape_key",
+    "solo_signature", "ServiceMetrics", "SimService", "DONE", "EVICTED",
+    "QUEUED", "RUNNING", "RasterStream", "TenantRequest", "TenantSession",
+]

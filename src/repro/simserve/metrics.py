@@ -1,0 +1,40 @@
+"""Per-tenant and service-level counters for `repro.simserve`.
+
+Everything the scheduler knows is counted here: admissions, queue wait
+(in rounds — the service's unit of time), evictions/resumes/preemptions,
+tenant-steps advanced, and the program-cache hit/miss/trace counts that
+back the zero-recompile acceptance criterion.  `snapshot()` renders one
+JSON-able dict; the CLI prints it and the bench suite lifts aggregate
+rates (steps/s, rounds/s) from it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class ServiceMetrics:
+    submitted: int = 0
+    admissions: int = 0
+    completed: int = 0
+    evictions: int = 0
+    resumes: int = 0
+    preemptions: int = 0
+    rounds: int = 0              # scheduler rounds executed
+    group_rounds: int = 0        # round-program launches (one per live group)
+    tenant_rounds: int = 0       # tenant-slot rounds advanced
+    tenant_steps: int = 0        # tenant simulation steps advanced (truncated)
+    queue_wait_rounds: int = 0   # summed over tenants, one per waiting round
+    wall_s: float = 0.0
+
+    def snapshot(self, cache: Optional[object] = None) -> dict:
+        d = dataclasses.asdict(self)
+        wall = max(self.wall_s, 1e-9)
+        d["rounds_per_s"] = self.rounds / wall
+        d["tenant_steps_per_s"] = self.tenant_steps / wall
+        if cache is not None:
+            d["program_cache"] = dict(
+                hits=cache.hits, misses=cache.misses,
+                builds=cache.builds, traces=cache.trace_counts())
+        return d

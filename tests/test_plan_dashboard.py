@@ -99,3 +99,40 @@ class TestHistory:
         html = dash.history_section({"wide": rep})
         assert "first 24 of 30 wall metrics shown" in html
         assert html.count("<rect") == 24
+
+
+class TestPlanHistory:
+    def _prior(self, cfg, recs, label):
+        wall = {f"{r['key']}_wall_s": r["result"]["wall_s"] + 0.1
+                for r in recs}
+        rep = bench_report.make_report(f"plan_{cfg['name']}",
+                                       dict(quick=True), dict(), wall)
+        return (label, rep)
+
+    def test_plan_over_plan_section_rendered(self):
+        cfg, recs = _records()
+        prior = [self._prior(cfg, recs, "plan_unit_0601"),
+                 self._prior(cfg, recs, "plan_unit_0701")]
+        html = dash.render(cfg, recs, prior_reports=prior)
+        assert "Wall across plan runs" in html
+        # run-index key maps every prior label plus the live store
+        assert "0=plan_unit_0601" in html and "2=current" in html
+        assert "<script" not in html
+
+    def test_no_section_without_prior_runs(self):
+        cfg, recs = _records()
+        html = dash.render(cfg, recs, prior_reports=[])
+        assert "Wall across plan runs" not in html
+
+    def test_load_plan_history_filters_by_name(self, tmp_path):
+        cfg, recs = _records()
+        _, rep = self._prior(cfg, recs, "x")
+        bench_report.save(rep, str(tmp_path))
+        other = bench_report.make_report("table1", dict(quick=True),
+                                         dict(), dict(a_wall_s=1.0))
+        bench_report.save(other, str(tmp_path))
+        got = plans.load_plan_history(str(tmp_path), cfg["name"])
+        assert len(got) == 1
+        assert got[0][1]["name"] == f"plan_{cfg['name']}"
+        assert plans.load_plan_history(str(tmp_path), "nope") == []
+        assert plans.load_plan_history("", "unit") == []

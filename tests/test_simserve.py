@@ -1,0 +1,228 @@
+"""repro.simserve: multi-tenant simulation service.
+
+The correctness spine under test: every tenant's streamed raster
+signature is bit-identical to the same config run solo through
+`StepProgram`, regardless of batch companions, slot-refill order, or
+evict/resume cycles — including resumes into a different shard layout —
+and the program cache traces each shape key exactly once no matter how
+many tenants ride it.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import distributed, observables
+from repro.core.params import EngineConfig, GridConfig
+from repro.core.step_program import StepProgram
+from repro.simserve import (DONE, RUNNING, RasterStream, SimService,
+                            TenantRequest, batcher)
+
+CFG = GridConfig(grid_x=2, grid_y=2, neurons_per_column=20,
+                 synapses_per_neuron=10)
+DENSE = EngineConfig(n_shards=2, delivery="dense")
+EVENT = EngineConfig(n_shards=2, delivery="event")
+
+
+def _solo(cfg, eng, n_steps, caps=None, cap_ev=None):
+    """(signature, sat_total) of the reference solo run."""
+    spec, planT, state = batcher.build_parts(cfg, eng, caps, cap_ev)
+    plan = distributed._base_plan(planT)
+    eplan = planT[1] if eng.delivery == "event" else None
+    prog = StepProgram.from_parts(spec, plan, eplan, state0=state,
+                                  mesh=None, caps=batcher.caps_dict(caps),
+                                  hier_groups=None)
+    st, raster, _ = prog.run(state, 0, n_steps)
+    sig = observables.raster_signature(np.asarray(raster),
+                                       np.asarray(plan.gid))
+    sat = int(np.asarray(st.sat).sum()) if hasattr(st, "sat") else 0
+    return sig, sat
+
+
+class TestStreaming:
+    def test_chunked_signature_matches_full(self):
+        rng = np.random.default_rng(0)
+        raster = rng.random((30, 2, 8)) < 0.2
+        gid = np.arange(16).reshape(2, 8)
+        full = observables.raster_signature(raster, gid)
+        stream = RasterStream()
+        for t0 in range(0, 30, 7):          # uneven chunks
+            stream.push(raster[t0:t0 + 7], gid, t0=t0)
+        assert stream.signature() == full
+        assert stream.n_events == int(raster.sum())
+
+    def test_csv_append_equals_full_dump(self, tmp_path):
+        rng = np.random.default_rng(1)
+        raster = rng.random((20, 1, 6)) < 0.3
+        gid = np.arange(6).reshape(1, 6)
+        full, chunked = str(tmp_path / "a.csv"), str(tmp_path / "b.csv")
+        observables.dump_events_csv(full, raster, gid)
+        for t0 in range(0, 20, 6):
+            observables.dump_events_csv(chunked, raster[t0:t0 + 6], gid,
+                                        append=True, t0=t0)
+        assert open(full).read() == open(chunked).read()
+
+
+class TestShapeKeys:
+    def test_seed_not_in_key(self):
+        a = batcher.shape_key(dataclasses.replace(CFG, seed=1), DENSE)
+        b = batcher.shape_key(dataclasses.replace(CFG, seed=999), DENSE)
+        assert a == b and hash(a) == hash(b)
+
+    def test_layout_and_caps_in_key(self):
+        base = batcher.shape_key(CFG, DENSE)
+        assert base != batcher.shape_key(CFG, EVENT)
+        assert base != batcher.shape_key(
+            CFG, dataclasses.replace(DENSE, n_shards=4))
+        assert base != batcher.shape_key(CFG, DENSE, caps=(8, 8))
+
+    def test_negotiate_headroom_and_monotone(self):
+        r = batcher.GroupCaps(e_cap=100, s_cap=50, kf=7, ki=5, cap_ev=64)
+        g = batcher.negotiate(r)
+        assert g.fits(r) and g.e_cap > r.e_cap and g.kf % 4 == 0
+        prior = batcher.GroupCaps(e_cap=999, s_cap=1, kf=99, ki=1,
+                                  cap_ev=0)
+        g2 = batcher.negotiate(r, prior=prior)
+        assert g2.e_cap >= 999 and g2.kf >= 99 and g2.fits(g)
+
+
+class TestServiceIdentity:
+    def test_soak_mixed_fleet_with_resharded_resume(self):
+        """The acceptance scenario: 6 tenants over 2 shape keys in 2
+        slots (queueing + preemption), one tenant force-evicted mid-run
+        and resumed into a DOUBLED shard count; every signature must
+        equal the solo run and each shape key must trace exactly once."""
+        reqs = []
+        for i, seed in enumerate([2013, 7, 99, 5, 123456, 42]):
+            reqs.append(TenantRequest(
+                f"t{i}", dataclasses.replace(CFG, seed=seed),
+                EVENT if i % 2 else DENSE, 60))
+        svc = SimService(slots=2, round_steps=15)
+        for r in reqs:
+            svc.submit(r)
+        svc.step_round()
+        svc.step_round()
+        victim = next(s for s in svc.sessions.values()
+                      if s.status == RUNNING)
+        svc.evict(victim.name)
+        svc.step_round()
+        svc.resume(victim.name, eng=dataclasses.replace(
+            victim.eng, n_shards=victim.eng.n_shards * 2))
+        snap = svc.run()
+
+        for r in reqs:
+            sess = svc.sessions[r.name]
+            assert sess.status == DONE
+            want, _ = _solo(r.cfg, sess.eng, r.n_steps)
+            assert sess.stream.signature() == want, r.name
+        # resharded tenant really ran in the new layout
+        assert svc.sessions[victim.name].eng.n_shards == 4
+        assert svc.sessions[victim.name].resumes == 1
+        # overloaded slots exercised the scheduler
+        assert snap["preemptions"] > 0
+        assert snap["queue_wait_rounds"] > 0
+        assert snap["evictions"] >= 1 and snap["resumes"] >= 1
+        # one trace per shape key, ever (3 keys: dense/H2, event/H2,
+        # and the resume layout at H4)
+        assert all(t == 1 for t in
+                   snap["program_cache"]["traces"].values())
+        assert snap["program_cache"]["builds"] == 3
+
+    def test_zero_recompile_on_refill(self):
+        """A tenant admitted into an existing group must not retrace:
+        submit two waves into the same shape key."""
+        svc = SimService(slots=2, round_steps=10)
+        svc.submit(TenantRequest(
+            "a", dataclasses.replace(CFG, seed=1), DENSE, 20))
+        svc.submit(TenantRequest(
+            "b", dataclasses.replace(CFG, seed=2), DENSE, 20))
+        svc.step_round()
+        svc.submit(TenantRequest(        # refills a's slot when it frees
+            "c", dataclasses.replace(CFG, seed=3), DENSE, 20))
+        snap = svc.run()
+        assert all(svc.sessions[n].status == DONE for n in "abc")
+        assert snap["program_cache"]["builds"] == 1
+        assert sum(snap["program_cache"]["traces"].values()) == 1
+        for n in "abc":
+            sess = svc.sessions[n]
+            want, _ = _solo(sess.request.cfg, sess.eng, 20)
+            assert sess.stream.signature() == want
+
+    def test_csv_stream_dir(self, tmp_path):
+        svc = SimService(slots=1, round_steps=10,
+                         stream_dir=str(tmp_path))
+        svc.submit(TenantRequest("x", dataclasses.replace(CFG, seed=4),
+                                 DENSE, 20))
+        svc.run()
+        path = os.path.join(str(tmp_path), "x.csv")
+        lines = open(path).read().splitlines()
+        assert lines[0] == "time_ms,neuron_gid"
+        assert len(lines) - 1 == svc.sessions["x"].stream.n_events
+
+
+class TestSaturationEviction:
+    def test_evict_resume_preserves_raster_and_sat(self):
+        """Satellite: a tiny event ring saturates (sat > 0); evicting
+        mid-run and resuming must reproduce the uninterrupted run's
+        raster AND saturation totals bit-exactly (the checkpoint
+        round-trips the event ring via delay ranks and the sat
+        counter)."""
+        cfg = dataclasses.replace(CFG, seed=11)
+        caps, cap_ev, n = (40, 64), 16, 60
+        want_sig, want_sat = _solo(cfg, EVENT, n, caps=caps,
+                                   cap_ev=cap_ev)
+        assert want_sat > 0          # the regime under test: saturated
+
+        svc = SimService(slots=2, round_steps=15)
+        svc.submit(TenantRequest("sat", cfg, EVENT, n, caps=caps,
+                                 cap_ev=cap_ev))
+        svc.step_round()
+        svc.step_round()
+        svc.evict("sat")
+        svc.step_round()             # a round elapses while parked
+        svc.resume("sat")
+        svc.run()
+        sess = svc.sessions["sat"]
+        assert sess.status == DONE and sess.evictions == 1
+        assert sess.stream.signature() == want_sig
+        assert sess.sat_total == want_sat
+
+
+class TestMetrics:
+    def test_snapshot_counts(self):
+        svc = SimService(slots=1, round_steps=10, preempt=False)
+        svc.submit(TenantRequest("a", dataclasses.replace(CFG, seed=1),
+                                 DENSE, 20))
+        svc.submit(TenantRequest("b", dataclasses.replace(CFG, seed=2),
+                                 DENSE, 20))
+        snap = svc.run()
+        assert snap["completed"] == 2 and snap["submitted"] == 2
+        assert snap["preemptions"] == 0          # disabled
+        assert snap["tenant_steps"] == 40
+        b = svc.sessions["b"]
+        assert b.queue_wait_rounds > 0           # b waited for the slot
+        assert snap["rounds"] == 4               # 2 rounds per tenant
+        assert snap["tenant_steps_per_s"] > 0
+
+
+class TestErrors:
+    def test_duplicate_name_rejected(self):
+        svc = SimService(slots=1)
+        svc.submit(TenantRequest("a", CFG, DENSE, 10))
+        with pytest.raises(ValueError):
+            svc.submit(TenantRequest("a", CFG, DENSE, 10))
+
+    def test_resume_cannot_change_delivery(self):
+        svc = SimService(slots=1, round_steps=10)
+        svc.submit(TenantRequest("a", CFG, DENSE, 30))
+        svc.step_round()
+        svc.evict("a")
+        with pytest.raises(ValueError):
+            svc.resume("a", eng=EVENT)
+
+    def test_evict_requires_running(self):
+        svc = SimService(slots=1)
+        svc.submit(TenantRequest("a", CFG, DENSE, 10))
+        with pytest.raises(ValueError):
+            svc.evict("a")           # still queued, not running

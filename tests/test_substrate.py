@@ -142,6 +142,27 @@ class TestServeEngine:
         b = eng.run([Request(prompt=prompt, max_new=5)])[0].out
         assert np.array_equal(a, b)
 
+    def test_refill_does_not_change_existing_slots(self):
+        # continuous batching: a long request's output must be identical
+        # whether it decodes alone or a finished companion's slot is
+        # refilled mid-flight (per-slot prefill touches only slot b)
+        cfg = get_smoke_config("qwen3-0.6b")
+        params = lm.init_params(cfg, jax.random.key(0))
+        rng = np.random.default_rng(7)
+        long_p = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+        solo = ServeEngine(cfg, params, batch=2, s_max=48).run(
+            [Request(prompt=long_p.copy(), max_new=8)])[0].out
+        reqs = [Request(prompt=long_p.copy(), max_new=8),
+                Request(prompt=rng.integers(0, cfg.vocab_size, size=4)
+                        .astype(np.int32), max_new=2),
+                Request(prompt=rng.integers(0, cfg.vocab_size, size=5)
+                        .astype(np.int32), max_new=2),
+                Request(prompt=rng.integers(0, cfg.vocab_size, size=3)
+                        .astype(np.int32), max_new=2)]
+        done = ServeEngine(cfg, params, batch=2, s_max=48).run(reqs)
+        assert all(r.out is not None for r in done)
+        assert np.array_equal(done[0].out, solo)
+
 
 class TestMicrobatch:
     def test_accumulation_matches_full_batch(self):
