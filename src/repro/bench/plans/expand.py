@@ -43,7 +43,10 @@ _HASHED_FIELDS = AXES + ("neurons_per_column", "synapses_per_neuron",
                          "stim_events", "stim_amplitude")
 
 # fields that pin the physics (the Table 1 invariant group); everything
-# else is execution layout and must not change the raster
+# else is execution layout and must not change the raster.  `connectivity`
+# (table residency) is deliberately NOT here: streamed and materialized
+# cells share a physics group, so the reporter's bit-identity gate covers
+# the streamed-regeneration invariant for free.
 PHYSICS_FIELDS = ("grid", "profile", "stim", "seed", "neurons_per_column",
                   "synapses_per_neuron", "steps")
 
@@ -60,7 +63,8 @@ def cell_key(cell: dict) -> str:
     def safe(v):
         return "".join(c if c.isalnum() else "-" for c in str(v))
 
-    return (f"{safe(cell['profile'])}_{cell['delivery']}"
+    return (f"{safe(cell['profile'])}_{safe(cell['connectivity'])}"
+            f"_{cell['delivery']}"
             f"_{cell['exchange']}_{cell['exchange_schedule']}"
             f"_{cell['placement']}_h{cell['shards']}p{cell['nprocs']}"
             f"_g{cell['grid']}_{cell['stim']}")
@@ -92,6 +96,10 @@ def _structural_reason(cell: dict) -> str:
                 f"{cell['nprocs']}")
     if cell["exchange"] == "hier" and cell["nprocs"] < 2:
         return "exchange='hier' needs >= 2 process groups"
+    if cell["delivery"] == "event" and cell["connectivity"] != \
+            "materialized":
+        return ("delivery='event' requires connectivity='materialized' "
+                "(event row tables are an O(E) synapse-id permutation)")
     return ""
 
 

@@ -48,7 +48,8 @@ cfg = GridConfig(grid_x=gx, grid_y=gy,
                  stim_amplitude=cell["stim_amplitude"])
 eng = EngineConfig(n_shards=cell["shards"], exchange=cell["exchange"],
                    exchange_schedule=cell["exchange_schedule"],
-                   placement=cell["placement"], delivery=cell["delivery"])
+                   placement=cell["placement"], delivery=cell["delivery"],
+                   connectivity=cell["connectivity"])
 sp = StepProgram(cfg, eng, mesh=D.make_mesh(cell["shards"]))
 state = sp.place(sp.init_state())
 jax.block_until_ready(sp.run(state, 0, cell["steps"])[1])      # compile

@@ -14,6 +14,7 @@ commands:
   axes:                           # grid product over ALL axes
     grid: [2x2]                   # problem-size ladder ("GXxGY")
     profile: [ring3, ring1]       # lateral connectivity (core.profiles)
+    connectivity: [materialized]  # table residency (or streamed:chunk=K)
     delivery: [dense, event]
     exchange: [halo, allgather, hier]
     exchange_schedule: [sync, pipelined]
@@ -63,11 +64,12 @@ AXIS_DOMAINS = {
 }
 
 # canonical axis order: cell keys, expansion order and hashes all follow it
-AXES = ("grid", "profile", "delivery", "exchange", "exchange_schedule",
-        "placement", "shards", "nprocs", "stim")
+AXES = ("grid", "profile", "connectivity", "delivery", "exchange",
+        "exchange_schedule", "placement", "shards", "nprocs", "stim")
 
 AXIS_DEFAULTS = {
-    "grid": ["2x2"], "profile": ["ring3"], "delivery": ["dense"],
+    "grid": ["2x2"], "profile": ["ring3"],
+    "connectivity": ["materialized"], "delivery": ["dense"],
     "exchange": ["allgather"], "exchange_schedule": ["sync"],
     "placement": ["block"], "shards": [1], "nprocs": [1],
     "stim": ["default"],
@@ -142,6 +144,13 @@ def _check_axis_value(axis: str, v, errs: List[str]) -> None:
         except Exception as e:
             errs.append(f"axes.profile: {v!r} rejected by "
                         f"core.profiles.parse: {e}")
+    elif axis == "connectivity":
+        try:
+            from ...core import connectivity
+            connectivity.parse_mode(str(v))
+        except Exception as e:
+            errs.append(f"axes.connectivity: {v!r} rejected by "
+                        f"core.connectivity.parse_mode: {e}")
 
 
 def validate(doc: dict, name_hint: Optional[str] = None) -> Plan:

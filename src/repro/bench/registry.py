@@ -64,6 +64,11 @@ def _connectivity_sweep(quick):
     return connectivity_sweep.run_suite(quick)
 
 
+def _weak_scaling(quick):
+    from .suites import weak_scaling
+    return weak_scaling.run_suite(quick)
+
+
 def _simserve_throughput(quick):
     from .suites import simserve_throughput
     return simserve_throughput.run_suite(quick)
@@ -90,6 +95,10 @@ BENCHES: Dict[str, Entry] = {e.name: e for e in [
     Entry("connectivity_sweep", _connectivity_sweep,
           "per-phase split across lateral-connectivity profiles "
           "(ring/Gaussian/exponential; arXiv:1803.08833)"),
+    Entry("weak_scaling", _weak_scaling,
+          "streamed O(chunk) table residency >= 8x smaller than "
+          "materialized + bit-identity wall + time/syn-event ladder at "
+          "constant synapses/shard (arXiv:1511.09325)"),
     Entry("lm_throughput", _lm_throughput,
           "LM substrate train/decode tokens/s (CPU micro-benchmark)"),
     Entry("simserve_throughput", _simserve_throughput,

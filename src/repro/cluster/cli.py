@@ -65,6 +65,7 @@ def run_plan_cell(cell: dict, timeout=None) -> dict:
         exchange_schedule=cell["exchange_schedule"],
         placement=cell["placement"],
         delivery=cell["delivery"],
+        connectivity_mode=cell["connectivity"],
         profile=cell["profile"],
         stim_events=cell["stim_events"],
         stim_amplitude=cell["stim_amplitude"])
@@ -93,7 +94,9 @@ def reference_signature(args) -> str:
                                             20.0))
     eng = EngineConfig(n_shards=args.shards, exchange=args.exchange,
                        placement=args.placement,
-                       delivery=getattr(args, "delivery", "dense"))
+                       delivery=getattr(args, "delivery", "dense"),
+                       connectivity=getattr(args, "connectivity_mode",
+                                            "materialized"))
     sp = StepProgram(cfg, eng)
     state, t0 = sp.init_state(), 0
     if getattr(args, "ckpt", None):

@@ -59,6 +59,8 @@ def summarize_point(results: List[dict]) -> dict:
                placement=results[0]["placement"],
                delivery=results[0].get("delivery", "dense"),
                profile=results[0].get("profile", "ring3"),
+               connectivity_mode=results[0].get("connectivity_mode",
+                                                "materialized"),
                exchange_schedule=results[0].get("exchange_schedule",
                                                 "sync"),
                tuned_env=results[0].get("tuned_env", False),

@@ -50,6 +50,10 @@ def add_workload_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--profile", default="ring3",
                     help="lateral-connectivity profile spec "
                          "(repro.core.profiles)")
+    ap.add_argument("--connectivity-mode", default="materialized",
+                    help="synapse-table residency: 'materialized' or "
+                         "'streamed:chunk=K' (per-chunk regeneration "
+                         "inside the step; requires --delivery dense)")
     ap.add_argument("--stim-events", type=int, default=1,
                     help="thalamic events per ms per column "
                          "(GridConfig.stim_events_per_ms_per_column)")
@@ -78,6 +82,8 @@ def workload_argv(args) -> list:
             "--placement", args.placement,
             "--delivery", getattr(args, "delivery", "dense"),
             "--profile", args.profile,
+            "--connectivity-mode", getattr(args, "connectivity_mode",
+                                           "materialized"),
             "--stim-events", str(getattr(args, "stim_events", 1)),
             "--stim-amplitude", str(getattr(args, "stim_amplitude",
                                             20.0)),
@@ -119,7 +125,8 @@ def main(argv=None) -> int:
                      stim_amplitude=args.stim_amplitude)
     eng = EngineConfig(n_shards=H, exchange=args.exchange,
                        exchange_schedule=args.exchange_schedule,
-                       placement=args.placement, delivery=args.delivery)
+                       placement=args.placement, delivery=args.delivery,
+                       connectivity=args.connectivity_mode)
     event = args.delivery == "event"
     sp = StepProgram(cfg, eng, mesh=dist_mesh.make_snn_mesh(H))
     state, t0 = sp.init_state(), 0
@@ -143,6 +150,7 @@ def main(argv=None) -> int:
         exchange=args.exchange, placement=args.placement,
         exchange_schedule=args.exchange_schedule,
         delivery=args.delivery, profile=args.profile,
+        connectivity_mode=args.connectivity_mode,
         stim_events=args.stim_events,
         tuned_env=os.environ.get("REPRO_TUNED_ENV", "") == "1",
         local_devices=jax.local_device_count(),

@@ -39,10 +39,29 @@ from .event_engine import EventState
 
 
 def _global_keys(spec: SimSpec, plan: ShardPlan):
-    """Canonical per-synapse key arrays (tgt_gid, src_gid, j), per shard."""
+    """Canonical per-synapse key arrays (tgt_gid, src_gid, j), per shard.
+
+    Streamed mode carries weight state in chunk-concatenated canonical
+    order — a contiguous valid prefix of each shard's [e_pad] axis — so
+    its keys come from `connectivity.streamed_shard_keys` padded to the
+    same layout; the on-disk format (global canonical order) is shared
+    with materialized mode."""
     gid = np.asarray(plan.gid)            # [H, N]
     src_gid = np.asarray(plan.src_gid)    # [H, S]
     H = gid.shape[0]
+    if spec.stream is not None:
+        e_pad = spec.stream.e_pad
+        tgt = np.zeros((H, e_pad), np.int64)
+        src = np.zeros((H, e_pad), np.int64)
+        j = np.zeros((H, e_pad), np.int64)
+        valid = np.zeros((H, e_pad), bool)
+        for h in range(H):
+            t_, s_, j_ = connectivity.streamed_shard_keys(
+                spec.cfg, spec.eng, h, spec.stream.chunk_cols)
+            n = t_.shape[0]
+            tgt[h, :n], src[h, :n], j[h, :n] = t_, s_, j_
+            valid[h, :n] = True
+        return tgt, src, j, valid
     tables = connectivity.build_all_shards(spec.cfg, spec.eng)
     tgt, src, j, valid = [], [], [], []
     for h in range(H):
@@ -144,7 +163,9 @@ def save(path: str, spec: SimSpec, plan: ShardPlan, state, t: int) -> str:
                 synapses_per_neuron=spec.cfg.synapses_per_neuron,
                 seed=spec.cfg.seed, connectivity=spec.cfg.connectivity,
                 ring_masses=list(prof.ring_masses()), t=int(t),
-                delivery=delivery, sat=sat_total)
+                delivery=delivery, sat=sat_total,
+                connectivity_mode=("streamed" if spec.stream is not None
+                                   else "materialized"))
 
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
@@ -178,6 +199,19 @@ def load(path: str, spec: SimSpec, plan: ShardPlan,
     assert saved_mode == spec.eng.delivery, \
         f"checkpoint delivery mode mismatch: saved {saved_mode!r} != " \
         f"configured {spec.eng.delivery!r}"
+    # Connectivity-residency guard (mode ONLY, not chunk size): a streamed
+    # checkpoint restores into any shard count AND any chunk size — both
+    # are execution layouts over the same canonical key order — but
+    # streamed <-> materialized is refused: the two modes size every
+    # synapse-state buffer differently, and a silent cross-mode restore
+    # would hide a misconfigured run.  Checkpoints from before this key
+    # were all written by materialized mode.
+    saved_cm = meta.get("connectivity_mode", "materialized")
+    cur_cm = "streamed" if spec.stream is not None else "materialized"
+    assert saved_cm == cur_cm, \
+        f"checkpoint connectivity mode mismatch: saved {saved_cm!r} != " \
+        f"configured {cur_cm!r} — streamed and materialized checkpoints " \
+        f"are not interchangeable; re-save under the target mode"
     # Profile mismatch means different synapse keys — restoring would
     # silently produce garbage.  Gate on the resolved kernel (per-ring
     # masses fully determine the draws given seed/grid/M), NOT the raw

@@ -64,7 +64,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from . import aer, engine, event_engine, stimulus, topology
+from . import aer, engine, event_engine, stimulus, stream_engine, topology
 from .engine import ShardPlan, ShardState, SimSpec
 from ..dist import compat as dist_compat
 from ..dist import mesh as dist_mesh
@@ -258,14 +258,24 @@ def _is_event(spec: SimSpec) -> bool:
     return spec.eng.delivery == "event"
 
 
+def _is_streamed(spec: SimSpec) -> bool:
+    return spec.stream is not None
+
+
 def _base_plan(planT):
     """The ShardPlan inside a delivery-dependent plan tree (event mode
-    carries (ShardPlan, EventPlan); NamedTuples are tuples, so dispatch on
-    the concrete type, not tuple-ness)."""
+    carries (ShardPlan, EventPlan), streamed mode (ShardPlan,
+    StreamedPlan); NamedTuples are tuples, so dispatch on the concrete
+    type, not tuple-ness)."""
     return planT if isinstance(planT, ShardPlan) else planT[0]
 
 
-def _plan_tree(spec: SimSpec, plan: ShardPlan, eplan):
+def _plan_tree(spec: SimSpec, plan: ShardPlan, eplan, splan=None):
+    if _is_streamed(spec):
+        if splan is None:
+            raise ValueError("streamed connectivity needs the StreamedPlan: "
+                             "pass splan= (from stream_engine.build)")
+        return (plan, splan)
     if not _is_event(spec):
         return plan
     if eplan is None:
@@ -290,8 +300,29 @@ class _Phases(NamedTuple):
 def _delivery_phases(spec: SimSpec, stim_k,
                      caps: Optional[dict] = None) -> _Phases:
     """Phase callables with the signature (planT_1, state_1, ...) -> ...,
-    dispatched on EngineConfig.delivery; both backends share it."""
+    dispatched on EngineConfig.delivery (+ streamed connectivity); all
+    backends share it."""
     caps = caps or {}
+    if _is_streamed(spec):
+        def pa(planT, st, t):
+            p, sp = planT
+            return stream_engine.phase_a(spec, p, sp, st, t, stim_k)
+
+        def pb(planT, st, ss, t):
+            p, sp = planT
+            return stream_engine.phase_b(spec, p, sp, st, ss, t)
+
+        def pa_dyn(planT, st, t):
+            p, sp = planT
+            return stream_engine.phase_a_dynamics(spec, p, sp, st, t,
+                                                  stim_k)
+
+        def pa_plast(planT, st, spiked, t):
+            p, sp = planT
+            return stream_engine.phase_a_plasticity(spec, p, sp, st,
+                                                    spiked, t)
+
+        return _Phases(pa, pb, pa_dyn, pa_plast)
     if _is_event(spec):
         c_post, c_src = caps.get("c_post"), caps.get("c_src")
 
@@ -361,7 +392,7 @@ def _src_false(planT):
 
 def make_run_program(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
                      eplan=None, caps: Optional[dict] = None,
-                     hier_groups=None):
+                     hier_groups=None, splan=None):
     """Returns run(state, t0, n_steps) -> (state, raster, timings), executing
     one shard per device of the `cells` mesh axis.  (Constructed via
     `core.StepProgram`; this is the machinery behind its `.run` handle.)
@@ -387,7 +418,7 @@ def make_run_program(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
     groups = (_resolve_groups(spec, mesh, hier_groups)
               if spec.eng.exchange == "hier" else None)
     exchange = _make_exchange(spec, plan, groups)
-    planT = _plan_tree(spec, plan, eplan)
+    planT = _plan_tree(spec, plan, eplan, splan)
     if spec.eng.exchange_schedule not in ("sync", "pipelined"):
         raise ValueError(
             f"unknown exchange_schedule {spec.eng.exchange_schedule!r}")
@@ -458,7 +489,7 @@ class PhasePrograms(NamedTuple):
 
 def make_phase_programs(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
                         eplan=None, caps: Optional[dict] = None,
-                        hier_groups=None) -> PhasePrograms:
+                        hier_groups=None, splan=None) -> PhasePrograms:
     """Separately-jitted shard_map'd phases over `mesh` — the machinery
     behind `StepProgram.phase_fns` / `.time_phases`, used by
     `repro.cluster` and the bench suites to attribute wall-clock to
@@ -471,7 +502,7 @@ def make_phase_programs(spec: SimSpec, plan: ShardPlan, mesh: Mesh,
     groups = (_resolve_groups(spec, mesh, hier_groups)
               if spec.eng.exchange == "hier" else None)
     exchange = _make_exchange(spec, plan, groups)
-    planT = _plan_tree(spec, plan, eplan)
+    planT = _plan_tree(spec, plan, eplan, splan)
     ph = _delivery_phases(spec, stim_k, caps)
     pspec, plan_specs, state_specs, tm_specs = _specs(spec, planT)
     plan_d = dist_sharding.shard_put(mesh, planT, "cells")

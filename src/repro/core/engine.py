@@ -73,6 +73,10 @@ class SimSpec(NamedTuple):
     e_cap: int
     s_cap: int
     n_total: int
+    # streamed-connectivity geometry (core.stream_engine.StreamSpec) or
+    # None for materialized tables; when set, e_cap is the padded
+    # synapse-STATE length and the ShardPlan syn_* leaves are dummies.
+    stream: object = None
 
 
 # ----------------------------------------------------------------------------
@@ -137,6 +141,10 @@ def build(cfg: GridConfig, eng: EngineConfig,
 
 def init_state(spec: SimSpec, plan: ShardPlan) -> ShardState:
     """Fresh dynamic state (zero weights; `build` installs w0) [H, ...]."""
+    if spec.stream is not None:
+        from . import stream_engine
+        return stream_engine.init_state(spec, plan)
+
     def one(p: ShardPlan) -> ShardState:
         v = jnp.full(p.exc_mask.shape, spec.izh.v_init, jnp.float32)
         b = jnp.where(p.exc_mask, spec.izh.b_exc, spec.izh.b_inh)
@@ -204,7 +212,7 @@ def phase_a_dynamics(spec: SimSpec, plan: ShardPlan, state: ShardState,
     """
     from ..kernels import ops as kops
 
-    cfg, stdp, izh = spec.cfg, spec.stdp, spec.izh
+    cfg, stdp = spec.cfg, spec.stdp
     up = spec.eng.use_pallas or None   # None -> auto (Pallas iff on TPU)
     D = cfg.n_delay_slots
     tf = t.astype(jnp.float32)
@@ -224,6 +232,29 @@ def phase_a_dynamics(spec: SimSpec, plan: ShardPlan, state: ShardState,
                                 indices_are_sorted=True)
     arr_ring = state.arr_ring.at[r].set(False)
 
+    # 4+5. stimulus + Izhikevich (shared with the streamed driver)
+    v, u, spiked = neuron_update(spec, plan, state, i_syn, t, stim_k)
+
+    new = ShardState(v=v, u=u, last_post=state.last_post, w=w,
+                     last_arr=last_arr, arr_ring=arr_ring)
+    tm = StepTimings(spikes=spiked.sum(), arrivals=arrivals.sum())
+    return new, spiked, tm
+
+
+def neuron_update(spec: SimSpec, plan: ShardPlan, state: ShardState,
+                  i_syn: jnp.ndarray, t: jnp.ndarray, stim_k: jax.Array
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Phase A steps 4-5: thalamic stimulus + Izhikevich update.
+
+    Factored out so `core.stream_engine` runs the identical op sequence on
+    a chunk-accumulated i_syn — the neuron-level halves of the two drivers
+    cannot drift apart.  Returns (v, u, spiked).
+    """
+    from ..kernels import ops as kops
+
+    cfg, izh = spec.cfg, spec.izh
+    up = spec.eng.use_pallas or None
+
     # 4. thalamic stimulus
     g2l = make_gid_to_local(spec, plan.shard_id)
     i_ext = stimulus.stim_current(cfg, stim_k, plan.columns, t, g2l,
@@ -239,11 +270,7 @@ def phase_a_dynamics(spec: SimSpec, plan: ShardPlan, state: ShardState,
         state.v, state.u, i_tot, a, b, c, d, v_peak=izh.v_peak, dt=izh.dt,
         substeps=izh.v_substeps, use_pallas=up)
     spiked = spiked & plan.neuron_valid
-
-    new = ShardState(v=v, u=u, last_post=state.last_post, w=w,
-                     last_arr=last_arr, arr_ring=arr_ring)
-    tm = StepTimings(spikes=spiked.sum(), arrivals=arrivals.sum())
-    return new, spiked, tm
+    return v, u, spiked
 
 
 def phase_a_plasticity(spec: SimSpec, plan: ShardPlan, state: ShardState,

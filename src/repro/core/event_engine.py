@@ -295,6 +295,11 @@ def build(cfg, eng, izh=None, stdp=None):
     and the event rows (they used to be rebuilt from scratch — the most
     expensive host-side construction step, doubled for nothing)."""
     from .params import DEFAULT_IZH, DEFAULT_STDP
+    if connectivity.parse_mode(eng.connectivity)[0] != "materialized":
+        raise ValueError(
+            "delivery='event' requires connectivity='materialized': the "
+            "event backend's per-source row tables are an O(E) permutation "
+            "of synapse ids, which contradicts O(chunk) streamed residency")
     tables = connectivity.build_all_shards(cfg, eng)
     spec, plan, base = engine.build(cfg, eng, izh or DEFAULT_IZH,
                                     stdp or DEFAULT_STDP, tables=tables)

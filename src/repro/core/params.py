@@ -140,6 +140,17 @@ class EngineConfig:
     # TPU-idiomatic, bit-reproducible) or 'event' (O(spikes x fan) gathered
     # rows; Pallas kernel target).
     delivery: str = "dense"
+    # synapse-table residency: 'materialized' stores every shard's incoming
+    # synapse tables for the whole run (O(E) live bytes per shard);
+    # 'streamed:chunk=<K>' keeps only per-chunk tables live — each jitted
+    # step scans over fixed chunks of K target columns and regenerates that
+    # chunk's tables from the same counter-based splitmix64 draw lanes, so
+    # live table bytes are O(K * neighbourhood * M) regardless of grid size
+    # while rasters AND weights stay bit-identical to materialized mode
+    # (weight state is carried in the same canonical synapse order).
+    # Streamed requires delivery='dense' (the event backend's row tables
+    # are an O(E) synapse-id permutation, contradicting O(chunk) residency).
+    connectivity: str = "materialized"
     use_pallas: bool = False
 
 

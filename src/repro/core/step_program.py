@@ -48,7 +48,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from . import aer, distributed, engine, event_engine, stimulus
+from . import (aer, connectivity, distributed, engine, event_engine,
+               stimulus, stream_engine)
 from .engine import ShardPlan, SimSpec
 from .params import (DEFAULT_IZH, DEFAULT_STDP, EngineConfig, GridConfig,
                      IzhikevichParams, StdpParams)
@@ -70,31 +71,43 @@ class StepProgram:
                  caps: Optional[dict] = None,
                  hier_groups=None):
         izh, stdp = izh or DEFAULT_IZH, stdp or DEFAULT_STDP
-        if eng.delivery == "event":
+        mode, _ = connectivity.parse_mode(eng.connectivity)
+        splan = None
+        if mode == "streamed":
+            spec, plan, splan, state = stream_engine.build(cfg, eng, izh,
+                                                           stdp)
+            eplan = None
+        elif eng.delivery == "event":
             spec, plan, eplan, state = event_engine.build(cfg, eng, izh,
                                                           stdp)
         else:
             spec, plan, state = engine.build(cfg, eng, izh, stdp)
             eplan = None
-        self._init(spec, plan, eplan, state, mesh, caps, hier_groups)
+        self._init(spec, plan, eplan, state, mesh, caps, hier_groups,
+                   splan=splan)
 
     @classmethod
     def from_parts(cls, spec: SimSpec, plan: ShardPlan, eplan=None, *,
                    state0=None, mesh: Optional[Mesh] = None,
-                   caps: Optional[dict] = None, hier_groups=None
-                   ) -> "StepProgram":
-        """Wrap an already-built (spec, plan[, eplan][, state]) without
-        re-running connectivity construction."""
+                   caps: Optional[dict] = None, hier_groups=None,
+                   splan=None) -> "StepProgram":
+        """Wrap an already-built (spec, plan[, eplan][, splan][, state])
+        without re-running connectivity construction."""
         sp = cls.__new__(cls)
-        sp._init(spec, plan, eplan, state0, mesh, caps, hier_groups)
+        sp._init(spec, plan, eplan, state0, mesh, caps, hier_groups,
+                 splan=splan)
         return sp
 
-    def _init(self, spec, plan, eplan, state0, mesh, caps, hier_groups):
+    def _init(self, spec, plan, eplan, state0, mesh, caps, hier_groups,
+              splan=None):
         if spec.eng.delivery == "event" and eplan is None:
             raise ValueError("delivery='event' needs an EventPlan")
+        if spec.stream is not None and splan is None:
+            raise ValueError("streamed connectivity needs a StreamedPlan")
         self.spec: SimSpec = spec
         self.plan: ShardPlan = plan
         self.eplan = eplan
+        self.splan = splan
         self.mesh = mesh
         self.caps = caps or {}
         self.hier_groups = hier_groups
@@ -118,8 +131,9 @@ class StepProgram:
     def planT(self):
         """The delivery-dependent plan tree every jitted program takes as
         its first argument (dense: ShardPlan; event: (ShardPlan,
-        EventPlan))."""
-        return distributed._plan_tree(self.spec, self.plan, self.eplan)
+        EventPlan); streamed: (ShardPlan, StreamedPlan))."""
+        return distributed._plan_tree(self.spec, self.plan, self.eplan,
+                                      self.splan)
 
     def init_state(self):
         """The freshly-built initial state (host-side, unplaced)."""
@@ -152,6 +166,9 @@ class StepProgram:
         reproduce); with a mesh it is the shard_map program honouring
         exchange/schedule."""
         if self.mesh is None:
+            if self.splan is not None:
+                return stream_engine.run(self.spec, self.plan, self.splan,
+                                         state, t0, n_steps)
             if self.eplan is not None:
                 return event_engine.run(
                     self.spec, self.plan, self.eplan, state, t0, n_steps,
@@ -161,7 +178,8 @@ class StepProgram:
         if self._run is None:
             self._run = distributed.make_run_program(
                 self.spec, self.plan, self.mesh, eplan=self.eplan,
-                caps=self.caps, hier_groups=self.hier_groups)
+                caps=self.caps, hier_groups=self.hier_groups,
+                splan=self.splan)
         return self._run(state, t0, n_steps)
 
     # -- phase handles (paper Table 2 split) -----------------------------
@@ -182,7 +200,8 @@ class StepProgram:
             else:
                 self._phases = distributed.make_phase_programs(
                     self.spec, self.plan, self.mesh, eplan=self.eplan,
-                    caps=self.caps, hier_groups=self.hier_groups)
+                    caps=self.caps, hier_groups=self.hier_groups,
+                    splan=self.splan)
         return self._phases
 
     def _vmap_exchange(self):

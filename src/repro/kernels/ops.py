@@ -5,12 +5,17 @@ explicit `use_pallas=True` off-TPU also falls back to the oracle (Pallas
 only supports interpret mode on CPU, and the interpret path is a test
 harness, ~100x slower) — so `EngineConfig(use_pallas=True)` is portable
 and rasters stay bit-identical across backend dispatch on CPU
-(tests/test_profiles.py).  The interpret flag runs the Pallas kernel body
-in Python on CPU (used by the kernel test suite to validate against
-ref.py).
+(tests/test_profiles.py).  Because that fallback silently changes which
+code ran, the first explicit-True-off-TPU resolution emits a one-time
+UserWarning naming the backend it fell back to; the numbers are still
+correct (oracle == kernel bit-wise on the covered shapes), the warning
+just keeps "I benchmarked the Pallas kernel" honest.  The interpret flag
+runs the Pallas kernel body in Python on CPU (used by the kernel test
+suite to validate against ref.py).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -28,11 +33,29 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+_warned_fallback = False
+
+
 def _resolve(use_pallas: Optional[bool]) -> bool:
     # requested-or-auto, gated on the backend actually supporting compiled
     # Pallas: forcing Pallas on CPU raises "Only interpret mode is
-    # supported on CPU backend" deep inside jit, so fall back here instead.
-    return _on_tpu() if use_pallas is None else (use_pallas and _on_tpu())
+    # supported on CPU backend" deep inside jit, so fall back here instead
+    # — loudly (once): an explicit True that quietly ran the oracle would
+    # let kernel benchmarks misreport what executed.
+    if use_pallas is None:
+        return _on_tpu()
+    if use_pallas and not _on_tpu():
+        global _warned_fallback
+        if not _warned_fallback:
+            _warned_fallback = True
+            warnings.warn(
+                f"use_pallas=True requested but the default backend is "
+                f"{jax.default_backend()!r}, not TPU: falling back to the "
+                f"jnp oracle (bit-identical results; compiled Pallas "
+                f"kernels need a TPU).  This warning is emitted once.",
+                UserWarning, stacklevel=3)
+        return False
+    return use_pallas
 
 
 def _pad_to_2d(x, rows_mult: int = 8):

@@ -61,6 +61,12 @@ def main():
                          "(repro.core.profiles): ring3 | ringN | "
                          "ring:max_ring=N | gaussian:sigma=S | "
                          "exponential:lambda=L")
+    ap.add_argument("--connectivity-mode", default="materialized",
+                    help="synapse-table residency: 'materialized' (full "
+                         "tables live) or 'streamed:chunk=K' (regenerate "
+                         "per-chunk tables inside the step; O(chunk) live "
+                         "bytes, bit-identical rasters AND weights; "
+                         "requires --delivery dense)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     args = ap.parse_args()
@@ -72,7 +78,8 @@ def main():
                      connectivity=args.profile)
     eng = EngineConfig(n_shards=args.shards, exchange=args.exchange,
                        exchange_schedule=args.exchange_schedule,
-                       placement=args.placement, delivery=args.delivery)
+                       placement=args.placement, delivery=args.delivery,
+                       connectivity=args.connectivity_mode)
     prof = profiles.from_config(cfg)       # fail fast on a bad spec
     if cluster_runtime.is_primary():
         procs = (f", {jax.process_count()} processes"

@@ -56,6 +56,8 @@ class TestValidate:
         dict(shards=[True]),
         dict(nprocs=["2"]),
         dict(profile=["definitely-not-a-profile"]),
+        dict(connectivity=["paged"]),
+        dict(connectivity=["streamed:chunk=0"]),
     ])
     def test_out_of_domain_axis_value_rejected(self, axes):
         with pytest.raises(plans.PlanError):
@@ -107,6 +109,26 @@ class TestExpand:
         hier = [c for c in cells if c["exchange"] == "hier"]
         assert hier and all(c["nprocs"] >= 2 for c in hier)
         assert any("hier" in e["reason"] for e in excluded)
+
+    def test_structural_event_refuses_streamed(self):
+        p = plans.validate(_doc(axes=dict(
+            delivery=["dense", "event"], shards=[2],
+            connectivity=["materialized", "streamed:chunk=2"])))
+        cells, excluded = plans.expand(p, env=ENV)
+        assert len(cells) == 3          # event x streamed dropped
+        assert not [c for c in cells if c["delivery"] == "event"
+                    and c["connectivity"] != "materialized"]
+        assert any("materialized" in e["reason"] for e in excluded)
+
+    def test_connectivity_is_layout_not_physics(self):
+        p = plans.validate(_doc(axes=dict(
+            delivery=["dense"], shards=[2],
+            connectivity=["materialized", "streamed:chunk=1"])))
+        cells, _ = plans.expand(p, env=ENV)
+        assert len(cells) == 2
+        assert len({c["physics_group"] for c in cells}) == 1
+        assert len({c["hash"] for c in cells}) == 2
+        assert len({c["key"] for c in cells}) == 2
 
     def test_user_exclude_drops_with_reason(self):
         p = plans.validate(_doc(exclude=[{"delivery": "event"}]))
@@ -185,7 +207,7 @@ class TestLoad:
             plans.load("/nonexistent/plan.yaml")
 
     @pytest.mark.parametrize("fname,n_cells", [
-        ("quick.yaml", 10), ("paper_scaling.yaml", 36)])
+        ("quick.yaml", 15), ("paper_scaling.yaml", 36)])
     def test_committed_plans_load_and_expand(self, fname, n_cells):
         pytest.importorskip("yaml")
         p = plans.load(os.path.join(PLANS_DIR, fname))

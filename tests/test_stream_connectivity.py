@@ -1,0 +1,381 @@
+"""Streamed on-the-fly connectivity (core.stream_engine) — the bit-identity
+test wall.
+
+The streamed mode's whole contract is "same bits, O(chunk) table bytes":
+per-chunk tables regenerated inside the jitted step from the same
+counter-based splitmix64 draw lanes must concatenate to exactly the
+materialized tables, and full runs must reproduce materialized rasters AND
+weights bit-for-bit across every layout knob.  Anything weaker silently
+forks the paper's Table 1 invariant, so everything here asserts exact
+equality, never closeness.  (The randomized-geometry form of the key
+equality lives with the other hypothesis tests in test_properties.py.)
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from _mp_helpers import run_with_devices
+from repro.core import checkpoint, connectivity, engine, observables, topology
+from repro.core import stream_engine as SE
+from repro.core.params import EngineConfig, GridConfig
+from repro.core.step_program import StepProgram
+
+PROFILES = ("ring3", "ring:max_ring=1", "gaussian:sigma=1.5")
+
+
+def _cfg(gx=2, gy=3, npc=10, M=8, profile="ring3", seed=7):
+    return GridConfig(grid_x=gx, grid_y=gy, neurons_per_column=npc,
+                      synapses_per_neuron=M, seed=seed,
+                      connectivity=profile)
+
+
+def _materialized_keys(cfg, eng, shard):
+    """Canonical (tgt_gid, src_gid, j) from the materialized builder —
+    build_shard already emits shard-local canonical order."""
+    t = connectivity.build_shard(cfg, eng, shard)
+    v = t.valid
+    gids = topology.owned_gids(cfg, shard, eng.n_shards, eng.placement)
+    return (gids[t.tgt_local[v]].astype(np.int64),
+            t.src_gid[t.src_idx[v]].astype(np.int64),
+            t.j[v].astype(np.int64))
+
+
+def _assert_keys_equal(cfg, eng, shard, chunk):
+    mt, ms, mj = _materialized_keys(cfg, eng, shard)
+    st, ss, sj = connectivity.streamed_shard_keys(cfg, eng, shard, chunk)
+    np.testing.assert_array_equal(st, mt)
+    np.testing.assert_array_equal(ss, ms)
+    np.testing.assert_array_equal(sj, mj)
+
+
+class TestParseMode:
+    def test_materialized(self):
+        assert connectivity.parse_mode("materialized") == \
+            ("materialized", None)
+
+    @pytest.mark.parametrize("spec,chunk", [
+        ("streamed", 1), ("streamed:chunk=1", 1), ("streamed:chunk=4", 4)])
+    def test_streamed(self, spec, chunk):
+        assert connectivity.parse_mode(spec) == ("streamed", chunk)
+
+    @pytest.mark.parametrize("spec", [
+        "paged", "streamed:chunk=0", "streamed:chunk=-2",
+        "streamed:rows=3"])
+    def test_rejects(self, spec):
+        with pytest.raises(ValueError):
+            connectivity.parse_mode(spec)
+
+
+class TestChunkKeyEquality:
+    """Regenerated chunk tables concatenate bit-equal to the materialized
+    builder — every profile x shard layout x chunk size, including a K
+    that does not divide the per-shard column count."""
+
+    @pytest.mark.parametrize("profile", PROFILES)
+    @pytest.mark.parametrize("placement", ["block", "scatter"])
+    @pytest.mark.parametrize("chunk", [1, 2, 3])
+    def test_streamed_keys_match_materialized(self, profile, placement,
+                                              chunk):
+        cfg = _cfg(profile=profile)
+        eng = EngineConfig(n_shards=2, placement=placement)
+        for shard in range(eng.n_shards):
+            _assert_keys_equal(cfg, eng, shard, chunk)
+
+    @pytest.mark.parametrize("placement", ["block", "scatter"])
+    def test_in_jit_tables_match_host_reference(self, placement):
+        """The jitted generator (uint32-limb splitmix64, integer ring
+        select, stable argsort) reproduces the host chunk reference
+        entry-by-entry: src gid, target, delay, plastic flag AND forward
+        slot j, with the valid entries exactly the leading e_start run."""
+        cfg = _cfg(profile="ring:max_ring=1")
+        eng = EngineConfig(n_shards=2, placement=placement,
+                           connectivity="streamed:chunk=2")
+        spec, plan, splan, _ = SE.build(cfg, eng)
+        ss = spec.stream
+        gen = SE.make_chunk_tables(
+            spec, jax.tree_util.tree_map(lambda a: a[0], plan))
+        gen_j = jax.jit(gen, static_argnums=2)
+        cand_np = np.asarray(splan.cand[0])
+        e_start = np.asarray(splan.e_start[0])
+        src_table = np.asarray(plan.src_gid[0])
+        for c in range(ss.n_chunks):
+            tb = gen_j(c, splan.cand[0][c], True)
+            lo, hi = c * ss.q, (c + 1) * ss.q
+            sidx = cand_np[c]
+            ref = connectivity._chunk_synapses(
+                cfg, eng, 0, src_table[sidx[sidx >= 0]].astype(np.int64),
+                lo, hi)
+            e = int(e_start[c + 1] - e_start[c])
+            assert e == ref.src_gid.shape[0]
+            valid = np.asarray(tb.valid)
+            assert valid[:e].all() and not valid[e:].any()
+            np.testing.assert_array_equal(
+                src_table[np.asarray(tb.src)[:e]], ref.src_gid)
+            np.testing.assert_array_equal(
+                np.asarray(tb.tgt_rel)[:e] + lo, ref.tgt_local)
+            np.testing.assert_array_equal(np.asarray(tb.delay)[:e],
+                                          ref.delay)
+            np.testing.assert_array_equal(np.asarray(tb.plastic)[:e],
+                                          ref.plastic)
+            np.testing.assert_array_equal(np.asarray(tb.j)[:e], ref.j)
+
+
+def _final_weights(sp, state):
+    """Valid synapse weights in canonical per-shard order, concatenated —
+    directly comparable between the two residency modes."""
+    w = np.asarray(state.w)
+    outs = []
+    if sp.splan is not None:
+        e_start = np.asarray(sp.splan.e_start)
+        for h in range(w.shape[0]):
+            outs.append(w[h, :int(e_start[h, -1])])
+    else:
+        valid = np.asarray(sp.plan.syn_valid)
+        for h in range(w.shape[0]):
+            outs.append(w[h][valid[h]])
+    return np.concatenate(outs)
+
+
+class TestRunBitIdentity:
+    """Full streamed StepProgram runs equal materialized: raster
+    signature AND final weights, across exchange wires and schedules."""
+
+    STEPS = 15
+
+    def _pair(self, exchange, schedule, chunk=2):
+        cfg = _cfg(gx=2, gy=2, npc=16, M=10)
+        base = dict(n_shards=2, exchange=exchange,
+                    exchange_schedule=schedule)
+        return (StepProgram(cfg, EngineConfig(**base)),
+                StepProgram(cfg, EngineConfig(
+                    **base, connectivity=f"streamed:chunk={chunk}")))
+
+    def _assert_identical_run(self, spm, sps):
+        sm, rm, _ = spm.run(spm.init_state(), 0, self.STEPS)
+        ssf, rs, _ = sps.run(sps.init_state(), 0, self.STEPS)
+        gid = np.asarray(spm.plan.gid)
+        assert observables.raster_signature(np.asarray(rm), gid) == \
+            observables.raster_signature(np.asarray(rs), gid)
+        np.testing.assert_array_equal(_final_weights(spm, sm),
+                                      _final_weights(sps, ssf))
+
+    @pytest.mark.parametrize("exchange", ["halo", "allgather"])
+    def test_fused_run(self, exchange):
+        spm, sps = self._pair(exchange, "sync")
+        self._assert_identical_run(spm, sps)
+
+    @pytest.mark.parametrize("exchange", ["halo", "allgather"])
+    @pytest.mark.parametrize("schedule", ["sync", "pipelined"])
+    def test_phase_split(self, exchange, schedule):
+        """The vmap phase programs (the profiler path) under both
+        schedules: streamed rasters and weights equal materialized."""
+        spm, sps = self._pair(exchange, schedule)
+        sm, _, rm, _ = spm.time_phases(spm.init_state(), 0, self.STEPS,
+                                       collect_rasters=True)
+        ssf, _, rs, _ = sps.time_phases(sps.init_state(), 0, self.STEPS,
+                                        collect_rasters=True)
+        assert np.array_equal(np.stack(rm), np.stack(rs))
+        np.testing.assert_array_equal(_final_weights(spm, sm),
+                                      _final_weights(sps, ssf))
+
+    def test_nondividing_chunk(self):
+        """chunk=2 over 3 owned columns per shard: the ragged last chunk
+        must not change a single bit."""
+        cfg = _cfg(gx=2, gy=3, npc=12, M=8)
+        spm = StepProgram(cfg, EngineConfig(n_shards=2))
+        sps = StepProgram(cfg, EngineConfig(
+            n_shards=2, connectivity="streamed:chunk=2"))
+        self._assert_identical_run(spm, sps)
+
+
+_STREAM_DIST_CODE = """
+import numpy as np
+from repro.core import EngineConfig, GridConfig, StepProgram, observables
+from repro.core import distributed as D
+
+cfg = GridConfig(grid_x=2, grid_y=2, neurons_per_column=40,
+                 synapses_per_neuron=16, seed=7)
+
+# reference: single-process MATERIALIZED vmap driver (cross-mode identity
+# and cross-process identity gated in one comparison)
+ref = StepProgram(cfg, EngineConfig(n_shards=4))
+_, raster_ref, _ = ref.run(ref.init_state(), 0, 60)
+sig_ref = observables.raster_signature(np.asarray(raster_ref),
+                                       np.asarray(ref.plan.gid))
+
+eng = EngineConfig(n_shards=4, exchange={exchange!r},
+                   exchange_schedule={schedule!r},
+                   connectivity='streamed:chunk=1')
+sp = StepProgram(cfg, eng, mesh=D.make_mesh(4))
+state_d = sp.place(sp.init_state())
+state_d, raster_d, tm = sp.run(state_d, 0, 60)
+sig_d = observables.raster_signature(np.asarray(raster_d),
+                                     np.asarray(sp.plan.gid))
+assert sig_d == sig_ref, 'streamed shard_map raster forked'
+print('OK', int(np.asarray(raster_d).sum()))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("exchange,schedule", [
+    ("halo", "sync"), ("halo", "pipelined"), ("allgather", "sync")])
+def test_streamed_shard_map_matches_materialized(exchange, schedule):
+    """Streamed under REAL collectives (shard_map, 4 devices) against the
+    materialized single-device reference — Table 1 across both the
+    process axis and the residency-mode axis at once."""
+    out = run_with_devices(
+        _STREAM_DIST_CODE.format(exchange=exchange, schedule=schedule), 4)
+    assert "OK" in out
+
+
+class TestMemoryBound:
+    """Streamed live synapse-table bytes are O(chunk), not O(E)."""
+
+    def _specs(self, gx, gy, chunk=1, npc=20, M=60):
+        cfg = _cfg(gx=gx, gy=gy, npc=npc, M=M, profile="ring:max_ring=1")
+        spec_s = SE.build(cfg, EngineConfig(
+            n_shards=1, connectivity=f"streamed:chunk={chunk}"))[0]
+        spec_m = engine.build(cfg, EngineConfig(n_shards=1))[0]
+        return spec_s, spec_m
+
+    def test_chunk_table_bytes_invariant_under_grid_doubling(self):
+        """Double the grid at fixed chunk: the regenerated-table buffer
+        (k_cap slots) must not grow — only the O(n_chunks) metadata may.
+        The materialized tables, by contrast, double with the grid."""
+        s1, m1 = self._specs(4, 4)
+        s2, m2 = self._specs(8, 4)
+        s4, m4 = self._specs(8, 8)
+        assert s1.stream.k_cap == s2.stream.k_cap == s4.stream.k_cap
+        assert SE.chunk_table_bytes(s1) == SE.chunk_table_bytes(s2) == \
+            SE.chunk_table_bytes(s4)
+        assert m2.e_cap >= 2 * m1.e_cap - 16
+        assert m4.e_cap >= 2 * m2.e_cap - 16
+
+    def test_ratio_floor_on_residency_grid(self):
+        """The weak_scaling residency claim re-derived from the actual
+        built specs: materialized tables >= 8x streamed live bytes on
+        the suite's quick grid."""
+        spec_s, spec_m = self._specs(10, 10, npc=30, M=100)
+        ratio = SE.materialized_table_bytes(spec_m.e_cap) / \
+            SE.streamed_table_bytes(spec_s)
+        assert ratio >= 8.0, f"residency ratio {ratio:.1f}x < 8x"
+
+    def test_jitted_step_inputs_are_chunk_sized(self):
+        """Program-level check: lower the streamed fused step and walk
+        its plan-tree inputs — no table/metadata leaf may reach synapse-
+        table scale.  Only the synapse STATE (weights, arrivals:
+        checkpointable physics, O(E) in either mode) is allowed to be
+        big; the regenerated tables live only inside the scan body."""
+        cfg = _cfg(gx=8, gy=8, npc=20, M=60, profile="ring:max_ring=1")
+        sps = StepProgram(cfg, EngineConfig(
+            n_shards=1, connectivity="streamed:chunk=1"))
+        spec_m = engine.build(cfg, EngineConfig(n_shards=1))[0]
+        assert sps.fused.lower(sps.planT, sps.init_state(), 0) is not None
+        budget = SE.materialized_table_bytes(spec_m.e_cap) / 8
+        for leaf in jax.tree_util.tree_leaves(sps.planT):
+            nbytes = leaf.size * leaf.dtype.itemsize
+            assert nbytes < budget, \
+                f"streamed plan leaf {leaf.shape} {leaf.dtype} is " \
+                f"{nbytes} B >= 1/8 of materialized tables ({budget} B)"
+
+
+class TestStreamedCheckpoint:
+    STEPS = 10
+
+    def _program(self, eng):
+        return StepProgram(_cfg(gx=2, gy=2, npc=16, M=10), eng)
+
+    def test_elastic_restore_other_shards_and_chunk(self, tmp_path):
+        """streamed save -> restore into a different shard count AND
+        placement AND chunk size -> continuation is bit-exact (raster
+        signature and every saved weight)."""
+        sp1 = self._program(EngineConfig(
+            n_shards=2, connectivity="streamed:chunk=1"))
+        s1, _, _ = sp1.run(sp1.init_state(), 0, self.STEPS)
+        p = checkpoint.save(str(tmp_path / "ckpt.npz"), sp1.spec,
+                            sp1.plan, s1, self.STEPS)
+        sref, rref, _ = sp1.run(s1, self.STEPS, self.STEPS)
+        sig_ref = observables.raster_signature(
+            np.asarray(rref), np.asarray(sp1.plan.gid))
+
+        sp2 = self._program(EngineConfig(
+            n_shards=3, placement="scatter",
+            connectivity="streamed:chunk=2"))
+        s2, t0 = checkpoint.load(p, sp2.spec, sp2.plan)
+        assert t0 == self.STEPS
+        s2f, r2, _ = sp2.run(s2, t0, self.STEPS)
+        assert observables.raster_signature(
+            np.asarray(r2), np.asarray(sp2.plan.gid)) == sig_ref
+        # weights re-saved from both layouts land in the same global
+        # canonical order and must match bit-for-bit
+        pa = checkpoint.save(str(tmp_path / "a.npz"), sp1.spec, sp1.plan,
+                             sref, 2 * self.STEPS)
+        pb = checkpoint.save(str(tmp_path / "b.npz"), sp2.spec, sp2.plan,
+                             s2f, 2 * self.STEPS)
+        za, zb = np.load(pa), np.load(pb)
+        np.testing.assert_array_equal(za["tgt"], zb["tgt"])
+        np.testing.assert_array_equal(za["src"], zb["src"])
+        np.testing.assert_array_equal(za["w"], zb["w"])
+
+    def test_cross_mode_load_refused_both_ways(self, tmp_path):
+        sps = self._program(EngineConfig(
+            n_shards=2, connectivity="streamed:chunk=1"))
+        spm = self._program(EngineConfig(n_shards=2))
+        ss, _, _ = sps.run(sps.init_state(), 0, self.STEPS)
+        sm, _, _ = spm.run(spm.init_state(), 0, self.STEPS)
+        ps = checkpoint.save(str(tmp_path / "s.npz"), sps.spec, sps.plan,
+                             ss, self.STEPS)
+        pm = checkpoint.save(str(tmp_path / "m.npz"), spm.spec, spm.plan,
+                             sm, self.STEPS)
+        with pytest.raises(AssertionError, match="connectivity mode"):
+            checkpoint.load(ps, spm.spec, spm.plan)
+        with pytest.raises(AssertionError, match="connectivity mode"):
+            checkpoint.load(pm, sps.spec, sps.plan)
+
+
+class TestEventExclusion:
+    def test_step_program_refuses_event_streamed(self):
+        with pytest.raises(ValueError, match="dense"):
+            StepProgram(_cfg(), EngineConfig(
+                delivery="event", connectivity="streamed:chunk=1"))
+
+    def test_event_build_refuses_streamed(self):
+        from repro.core import event_engine
+        with pytest.raises(ValueError, match="materialized"):
+            event_engine.build(_cfg(), EngineConfig(
+                delivery="event", connectivity="streamed:chunk=1"))
+
+
+class TestPallasFallbackWarning:
+    """`use_pallas=True` off-TPU falls back to the jnp oracle — loudly,
+    once, with unchanged numbers."""
+
+    def _args(self):
+        import jax.numpy as jnp
+        return [jnp.zeros((4,), jnp.float32)] * 7
+
+    def test_explicit_true_off_tpu_warns_once(self, monkeypatch):
+        from repro.kernels import ops
+        if jax.default_backend() == "tpu":
+            pytest.skip("fallback warning only fires off-TPU")
+        monkeypatch.setattr(ops, "_warned_fallback", False)
+        args = self._args()
+        with pytest.warns(UserWarning, match="use_pallas=True"):
+            out_pallas = ops.izhikevich_update(*args, v_peak=30.0,
+                                               use_pallas=True)
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            ops.izhikevich_update(*args, v_peak=30.0, use_pallas=True)
+        out_ref = ops.izhikevich_update(*args, v_peak=30.0,
+                                        use_pallas=False)
+        for a, b in zip(out_pallas, out_ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_auto_never_warns(self):
+        from repro.kernels import ops
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            ops.izhikevich_update(*self._args(), v_peak=30.0)
