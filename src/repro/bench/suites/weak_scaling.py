@@ -50,18 +50,7 @@ def _weight_sig(sp: StepProgram, state) -> str:
     """sha256 over the final valid synapse weights in canonical order —
     comparable between materialized and streamed StepPrograms (both lay
     valid weights out in (tgt_gid, src_gid, j) order per shard)."""
-    import hashlib
-    h = hashlib.sha256()
-    w = np.asarray(state.w)
-    if sp.splan is not None:
-        e_start = np.asarray(sp.splan.e_start)     # [H, n_chunks + 1]
-        for hh in range(w.shape[0]):
-            h.update(w[hh, :int(e_start[hh, -1])].tobytes())
-    else:
-        valid = np.asarray(sp.plan.syn_valid)
-        for hh in range(w.shape[0]):
-            h.update(w[hh][valid[hh]].tobytes())
-    return h.hexdigest()
+    return sp.weight_signature(state).hex()
 
 
 def _run_cell(cfg: GridConfig, eng: EngineConfig, steps: int) -> dict:

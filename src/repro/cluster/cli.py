@@ -35,15 +35,33 @@ def run_point(args, nprocs: int, timeout: float = 900.0) -> dict:
     the aggregated scaling row.  `args.tuned_env` (the `--tuned-env`
     flag) launches the workers under the tcmalloc/XLA host-tuning preset
     (`_flags.tuned_host_env`); the workers record it in their result
-    JSON so A/B rows stay distinguishable."""
+    JSON so A/B rows stay distinguishable.
+
+    `args.supervise` routes through `local.supervised_launch`: beacon
+    stall detection, fault-injection arming (`args.fault` or the ambient
+    REPRO_FAULT, first attempt only), and gang relaunch under
+    `args.max_restarts`; the restart history lands in the row's
+    `recovery` dict."""
     H = args.shards
     if H % nprocs != 0:
         raise ValueError(f"shards {H} not divisible by nprocs {nprocs}")
     cmd = ["-m", "repro.cluster.worker", *cworker.workload_argv(args)]
-    outputs = local.launch(cmd, nprocs=nprocs,
-                           devices_per_proc=H // nprocs, timeout=timeout,
-                           tuned_env=getattr(args, "tuned_env", False))
-    return crep.summarize_point(crep.parse_worker_outputs(outputs))
+    attempts = []
+    if getattr(args, "supervise", False):
+        outputs, attempts = local.supervised_launch(
+            cmd, nprocs=nprocs, devices_per_proc=H // nprocs,
+            timeout=timeout,
+            stall_timeout=getattr(args, "stall_timeout", 120.0),
+            max_restarts=getattr(args, "max_restarts", 2),
+            fault=getattr(args, "fault", None),
+            tuned_env=getattr(args, "tuned_env", False))
+    else:
+        outputs = local.launch(cmd, nprocs=nprocs,
+                               devices_per_proc=H // nprocs,
+                               timeout=timeout,
+                               tuned_env=getattr(args, "tuned_env", False))
+    return crep.summarize_point(crep.parse_worker_outputs(outputs),
+                                attempts=attempts)
 
 
 def run_plan_cell(cell: dict, timeout=None) -> dict:
@@ -74,10 +92,12 @@ def run_plan_cell(cell: dict, timeout=None) -> dict:
                      timeout=subproc.resolve_timeout(timeout))
 
 
-def reference_signature(args) -> str:
-    """Raster signature from the single-process vmap engine for the same
-    (seed, grid) config — the ground truth `run --verify` compares with.
-    Runs on this process's single default device (logical shards only);
+def reference_signatures(args) -> tuple:
+    """(raster_sig, weights_sig) from the single-process vmap engine for
+    the same (seed, grid) config — the ground truth `run --verify`
+    compares with: a supervised run that crashed and recovered must match
+    BOTH, the Table 1 invariant extended along the failure axis.  Runs on
+    this process's single default device (logical shards only);
     dispatches on the workload's delivery backend like the workers do."""
     import numpy as np
 
@@ -101,46 +121,79 @@ def reference_signature(args) -> str:
     state, t0 = sp.init_state(), 0
     if getattr(args, "ckpt", None):
         state, t0 = sp.load(args.ckpt)
-    _, raster, _ = sp.run(state, t0, args.steps)
-    return observables.raster_signature(np.asarray(raster),
-                                        np.asarray(sp.plan.gid)).hex()
+    state_f, raster, _ = sp.run(state, t0, args.steps)
+    return (observables.raster_signature(np.asarray(raster),
+                                         np.asarray(sp.plan.gid)).hex(),
+            sp.weight_signature(state_f).hex())
+
+
+def reference_signature(args) -> str:
+    """Raster-only reference (see `reference_signatures`)."""
+    return reference_signatures(args)[0]
 
 
 def cmd_run(args) -> int:
     """`run`: one localhost multi-process job; prints the per-process
-    phase walls and (unless --no-verify) checks the gathered raster
-    bit-matches the single-process engine.  Exit 1 on a mismatch."""
+    phase walls and (unless --no-verify) checks the gathered raster AND
+    final weights bit-match the single-process engine.  Exit 1 on a
+    mismatch.  With --supervise, injected or real failures are recovered
+    by gang relaunch from the newest valid epoch (see --ckpt-every) and
+    the restart history is printed."""
     if args.shards is None:
         args.shards = args.nprocs
+    if (getattr(args, "supervise", False) and args.ckpt_every > 0
+            and not args.ckpt_dir):
+        # recovery needs a place for epochs; default to a fresh temp dir
+        import tempfile
+        args.ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
     row = run_point(args, args.nprocs, timeout=args.timeout)
     print(f"[cluster] {args.nprocs} procs x "
           f"{args.shards // args.nprocs} shards: wall {row['wall_s']}s, "
-          f"rate {row['rate_hz']} Hz, raster {row['raster_sig'][:16]}...")
+          f"rate {row['rate_hz']} Hz, raster {row['raster_sig'][:16]}..., "
+          f"weights {row.get('weights_sig', '?')[:16]}...")
     for pp in row["per_proc"]:
         print(f"[cluster]   proc {pp['proc']}: " + ", ".join(
             f"{k}={pp[k]}" for k in pp if k != "proc"))
+    rec = row.get("recovery", {})
+    if rec.get("restarts"):
+        print(f"[cluster] recovered after {rec['restarts']} restart(s); "
+              f"resumed at t={rec.get('restored_t')} "
+              f"({rec.get('recovered_steps', 0)} steps salvaged)")
+        for a in rec.get("attempts", []):
+            print(f"[cluster]   attempt {a['index']}: {a['reason']} "
+                  f"(backoff {a['backoff_s']}s)")
     if args.verify:
-        ref = reference_signature(args)
-        if ref != row["raster_sig"]:
-            print(f"[cluster] FAIL: raster differs from single-process "
-                  f"engine ({row['raster_sig'][:16]} != {ref[:16]})")
+        ref_r, ref_w = reference_signatures(args)
+        fail = []
+        if ref_r != row["raster_sig"]:
+            fail.append(f"raster {row['raster_sig'][:16]} != {ref_r[:16]}")
+        if row.get("weights_sig") and ref_w != row["weights_sig"]:
+            fail.append(
+                f"weights {row['weights_sig'][:16]} != {ref_w[:16]}")
+        if fail:
+            print(f"[cluster] FAIL: differs from single-process engine "
+                  f"({'; '.join(fail)})")
             return 1
-        print("[cluster] verify OK: bit-identical to the single-process "
-              "engine")
+        print("[cluster] verify OK: raster and weights bit-identical to "
+              "the single-process engine")
     return 0
 
 
 def sweep_report(quick: bool = False, nprocs_list=None, out: str = None,
                  timeout: float = 900.0, profile: str = "ring3",
                  delivery: str = "dense", exchange_schedule: str = "sync",
-                 tuned_env: bool = False) -> dict:
+                 tuned_env: bool = False, ckpt_every: int = 0) -> dict:
     """Run the strong-scaling sweep; returns (and optionally writes) the
     BENCH report.  Total shards H = max process count, so the 1-process
     point runs H local shards and the P-process point H/P each — the
     ISSUE's headline invariant.  `profile` selects the lateral-connectivity
     kernel (repro.core.profiles) and `delivery` the synaptic backend; the
     invariant must — and does — hold at every reach and for both
-    backends."""
+    backends.  `ckpt_every` > 0 adds periodic checkpointing (fresh epoch
+    dir per point) so the rows carry `ckpt_wall_s` — the data behind the
+    EXPERIMENTS.md recovery-overhead table."""
+    import tempfile
+
     from ..bench import report as bench_report
 
     nprocs_list = sorted(nprocs_list or [1, 2])
@@ -154,18 +207,25 @@ def sweep_report(quick: bool = False, nprocs_list=None, out: str = None,
         profile=profile,
         delivery=delivery,
         exchange_schedule=exchange_schedule,
-        tuned_env=tuned_env)
+        tuned_env=tuned_env,
+        ckpt_every=ckpt_every)
     rows = []
     for p in nprocs_list:
+        if ckpt_every > 0:
+            # fresh per point: a stale epoch would otherwise short-circuit
+            # the run via the worker's self-resume
+            args.ckpt_dir = tempfile.mkdtemp(prefix=f"repro_sweep_p{p}_")
         row = run_point(args, p, timeout=timeout)
         print(f"[cluster] point nprocs={p}: wall {row['wall_s']}s "
               f"sig {row['raster_sig'][:16]}", flush=True)
         rows.append(row)
-    sigs = {r["raster_sig"] for r in rows}
-    if len(sigs) != 1:
-        raise RuntimeError(
-            f"paper Table 1 invariant violated across the process axis: "
-            f"{[(r['nprocs'], r['raster_sig'][:16]) for r in rows]}")
+    for key in ("raster_sig", "weights_sig"):
+        sigs = {r[key] for r in rows if key in r}
+        if len(sigs) > 1:
+            raise RuntimeError(
+                f"paper Table 1 invariant violated across the process "
+                f"axis ({key}): "
+                f"{[(r['nprocs'], r[key][:16]) for r in rows]}")
     config = dict(quick=quick, nprocs=nprocs_list, shards=args.shards,
                   grid=args.grid, neurons_per_column=args.neurons_per_column,
                   synapses=args.synapses, steps=args.steps,
@@ -174,6 +234,8 @@ def sweep_report(quick: bool = False, nprocs_list=None, out: str = None,
                   delivery=args.delivery,
                   exchange_schedule=args.exchange_schedule,
                   tuned_env=tuned_env)
+    if ckpt_every > 0:       # only when set: keeps old baselines comparable
+        config["ckpt_every"] = ckpt_every
     rep = crep.scaling_report(rows, config)
     if out:
         path = bench_report.save(rep, out)
@@ -197,6 +259,21 @@ def main(argv=None) -> int:
                     help="launch workers under the tcmalloc/XLA host-"
                          "tuning preset (_flags.tuned_host_env); recorded "
                          "in the result JSON for A/B comparison")
+    rp.add_argument("--supervise", action="store_true",
+                    help="beacon stall detection + gang relaunch from the "
+                         "newest valid epoch on any failure (see "
+                         "--ckpt-every / --max-restarts)")
+    rp.add_argument("--fault", default=None,
+                    help="deterministic fault to inject on the FIRST "
+                         "attempt (repro.cluster.faults grammar, e.g. "
+                         "crash@step=30:rank=1); default: the ambient "
+                         "REPRO_FAULT variable")
+    rp.add_argument("--max-restarts", type=int, default=2,
+                    help="supervised restart budget (relaunches, not "
+                         "counting the first attempt)")
+    rp.add_argument("--stall-timeout", type=float, default=120.0,
+                    help="supervised: declare the gang hung when no "
+                         "worker beacon changes for this many seconds")
 
     sp = sub.add_parser("sweep", help="strong scaling over process counts")
     sp.add_argument("--nprocs-list", default="1,2",
@@ -219,6 +296,10 @@ def main(argv=None) -> int:
     sp.add_argument("--tuned-env", action="store_true",
                     help="launch workers under the tcmalloc/XLA host-"
                          "tuning preset")
+    sp.add_argument("--ckpt-every", type=int, default=0,
+                    help="periodic checkpoint period K for every point "
+                         "(0 = off); rows then carry ckpt_wall_s — the "
+                         "EXPERIMENTS.md recovery-overhead data")
 
     args = ap.parse_args(argv)
     if args.cmd == "run":
@@ -228,7 +309,7 @@ def main(argv=None) -> int:
                  timeout=args.timeout, profile=args.profile,
                  delivery=args.delivery,
                  exchange_schedule=args.exchange_schedule,
-                 tuned_env=args.tuned_env)
+                 tuned_env=args.tuned_env, ckpt_every=args.ckpt_every)
     return 0
 
 

@@ -1,27 +1,47 @@
 """Localhost process launcher — the paper's "small-scale commodity
-cluster" in miniature.
+cluster" in miniature, now with a supervisor.
 
 Spawns N worker interpreters, each wired with the coordinator address and
 its own forced host-device count (via the last-flag-wins `XLA_FLAGS`
 append in `repro._flags`), collects their merged stdout/stderr, and reaps
-the survivors as soon as any worker fails or the deadline passes — a hung
-collective must never hang the parent.
+the survivors as soon as any worker fails, stalls, or the deadline passes
+— a hung collective must never hang the parent.
+
+Two launch modes:
+
+  `launch`            one gang, one life: any worker failure raises
+                      `LaunchError` (carrying exit codes, output tails,
+                      any partial CLUSTER_RESULT payloads, and which
+                      workers needed SIGKILL vs SIGTERM to die).
+  `supervised_launch` production mode: per-worker file beacons replace
+                      the single blunt deadline with *progress*-based
+                      stall detection, and any gang failure triggers a
+                      reap + full-gang relaunch with exponential backoff
+                      under a bounded restart budget.  Workers self-resume
+                      from the newest VALID epoch in their `--ckpt-dir`
+                      (sha256-verified, corrupt epochs skipped), so a
+                      restart costs at most one checkpoint period of
+                      replay — and, by the reproducible-construction
+                      property, changes no output bit.
 
 This module is deliberately jax-free: the parent that launches a cluster
 (pytest, the CLI, a bench suite) must keep its own single default device.
 """
 from __future__ import annotations
 
+import json
 import os
 import socket
 import subprocess
 import sys
 import tempfile
 import time
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import repro
 from .._flags import cluster_env
+from . import faults
+from .worker import RESULT_PREFIX
 
 # src/ directory containing the `repro` package, exported on the child
 # PYTHONPATH so workers import `repro` even when the parent runs
@@ -30,26 +50,63 @@ SRC = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
 
 _TAIL = 2000
 
+# stdout markers of a coordinator that lost the free_port() TOCTOU race
+# (the probed port was re-taken before jax.distributed bound it)
+_BIND_MARKERS = ("Address already in use", "address already in use",
+                 "Failed to bind", "EADDRINUSE")
+
+
+def partial_results(outputs: Sequence[str]) -> Dict[int, dict]:
+    """{proc index: parsed CLUSTER_RESULT payload} for every worker that
+    managed to emit one before the gang died — postmortem material that
+    rides on `LaunchError`."""
+    out: Dict[int, dict] = {}
+    for i, text in enumerate(outputs):
+        for ln in text.splitlines():
+            if ln.startswith(RESULT_PREFIX):
+                try:
+                    out[i] = json.loads(ln[len(RESULT_PREFIX):])
+                except ValueError:
+                    pass
+    return out
+
 
 class LaunchError(RuntimeError):
-    """A worker failed or the launch timed out.
+    """A worker failed, stalled, or the launch timed out.
 
     Attributes: `returncodes` (per-process, None = still running when
-    reaped) and `outputs` (per-process merged stdout/stderr, possibly
-    partial)."""
+    reaped), `outputs` (per-process merged stdout/stderr, possibly
+    partial), `partial_results` ({proc: CLUSTER_RESULT dict} for workers
+    that reported before dying), and `attempts` (supervised-launch
+    restart history, [] outside supervision)."""
 
     def __init__(self, msg: str, returncodes: Sequence[Optional[int]],
-                 outputs: Sequence[str]):
+                 outputs: Sequence[str],
+                 attempts: Optional[List[dict]] = None):
         self.returncodes = list(returncodes)
         self.outputs = list(outputs)
+        self.partial_results = partial_results(outputs)
+        self.attempts = list(attempts or [])
+        extra = ""
+        if self.partial_results:
+            extra += (f"\npartial CLUSTER_RESULT payloads recovered from "
+                      f"proc(s) {sorted(self.partial_results)} "
+                      f"(.partial_results)")
+        if self.attempts:
+            lines = [f"  attempt {a['index']}: {a['reason']} "
+                     f"(rc={a['returncodes']}, backoff {a['backoff_s']}s)"
+                     for a in self.attempts]
+            extra += "\nrestart history:\n" + "\n".join(lines)
         tails = "\n".join(
             f"--- proc {i} (rc={rc}) ---\n{out[-_TAIL:] or '<no output>'}"
             for i, (rc, out) in enumerate(zip(returncodes, outputs)))
-        super().__init__(f"{msg}\n{tails}")
+        super().__init__(f"{msg}{extra}\n{tails}")
 
 
 def free_port() -> int:
-    """An OS-assigned free TCP port for the coordinator service."""
+    """An OS-assigned free TCP port for the coordinator service.  Probe
+    and bind are separate processes, so this is inherently racy (TOCTOU);
+    `launch` retries once on a fresh port when the coordinator loses."""
     with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
         s.bind(("127.0.0.1", 0))
         return s.getsockname()[1]
@@ -62,38 +119,56 @@ def spawn_supported() -> bool:
     return os.name == "posix" and bool(sys.executable)
 
 
-def _reap(procs) -> None:
-    """Terminate, then kill, every still-running worker."""
-    for p in procs:
+def _reap(procs, total_timeout: float = 5.0) -> dict:
+    """Terminate, then kill, every still-running worker.
+
+    The grace wait is bounded by ONE shared deadline across the whole
+    gang (per-proc timeouts previously stacked to nprocs x 0.1s minimum);
+    returns {"terminated": [...], "killed": [...]} so the error tails can
+    record which workers ignored SIGTERM and needed SIGKILL."""
+    info = dict(terminated=[], killed=[])
+    for i, p in enumerate(procs):
         if p.poll() is None:
+            info["terminated"].append(i)
             p.terminate()
-    deadline = time.monotonic() + 5.0
+    deadline = time.monotonic() + total_timeout
+    for i, p in enumerate(procs):
+        if p.poll() is None:
+            try:
+                p.wait(timeout=max(0.0, deadline - time.monotonic()))
+            except subprocess.TimeoutExpired:
+                info["killed"].append(i)
+                p.kill()
     for p in procs:
         if p.poll() is None:
             try:
-                p.wait(timeout=max(0.1, deadline - time.monotonic()))
+                p.wait(timeout=5.0)
             except subprocess.TimeoutExpired:
-                p.kill()
-                p.wait()
+                pass
+    return info
 
 
-def launch(cmd: Sequence[str], nprocs: int, devices_per_proc: int = 1,
-           timeout: float = 900.0, port: Optional[int] = None,
-           extra_env: Optional[dict] = None, echo: bool = False,
-           tuned_env: bool = False) -> List[str]:
-    """Run `cmd` (argv after the interpreter, e.g. `["-m",
-    "repro.cluster.worker", ...]`) as `nprocs` coordinated processes.
+def _reap_tail(info: dict) -> str:
+    if not info.get("terminated") and not info.get("killed"):
+        return ""
+    return (f"; reaped: SIGTERM -> procs {info.get('terminated', [])}"
+            f", SIGKILL needed -> procs {info.get('killed', [])}")
 
-    Returns the per-process merged stdout/stderr once all exit 0.  On any
-    nonzero exit or timeout, every surviving worker is reaped and a
-    `LaunchError` carries the per-process exit codes and output tails.
-    `tuned_env=True` launches every worker under the tcmalloc/logging
-    host-tuning preset (`_flags.tuned_host_env`; numerics-neutral by
-    construction, marked via REPRO_TUNED_ENV in the worker result).
+
+def _launch_attempt(cmd: Sequence[str], nprocs: int, devices_per_proc: int,
+                    timeout: float, coordinator: str,
+                    extra_env: Optional[dict], tuned_env: bool,
+                    stall_timeout: Optional[float] = None,
+                    beacon_dir: Optional[str] = None) -> List[str]:
+    """One gang, one life: spawn, monitor, collect or raise.
+
+    With `stall_timeout` set, per-worker beacon files (written by the
+    workers into `beacon_dir`, see `cluster.faults.BeaconWriter`) provide
+    progress-based liveness: the gang is declared stalled when NO beacon
+    changes for `stall_timeout` seconds (a hang in any one worker freezes
+    the whole gang at its next collective, so gang-level change is the
+    right signal and per-rank cadence differences cannot false-positive).
     """
-    if nprocs < 1:
-        raise ValueError(f"nprocs must be >= 1, got {nprocs}")
-    coordinator = f"127.0.0.1:{port or free_port()}"
     procs, files = [], []
     try:
         for pid in range(nprocs):
@@ -108,9 +183,12 @@ def launch(cmd: Sequence[str], nprocs: int, devices_per_proc: int = 1,
                 [sys.executable, *cmd], stdout=f, stderr=subprocess.STDOUT,
                 env=env, text=True))
 
-        deadline = time.monotonic() + timeout
+        start = time.monotonic()
+        deadline = start + timeout
         pending = set(range(nprocs))
         failed = timed_out = False
+        stalled: Optional[str] = None
+        progress: Dict[int, Tuple[tuple, float]] = {}
         while pending and not failed:
             for i in sorted(pending):
                 rc = procs[i].poll()
@@ -120,31 +198,165 @@ def launch(cmd: Sequence[str], nprocs: int, devices_per_proc: int = 1,
                         failed = True
                         break
             if pending and not failed:
-                if time.monotonic() > deadline:
+                now = time.monotonic()
+                if now > deadline:
                     timed_out = True
                     break
+                if stall_timeout is not None:
+                    for rank, b in faults.read_beacons(beacon_dir).items():
+                        sig = (b.get("step"), b.get("phase"))
+                        if progress.get(rank, (None, 0.0))[0] != sig:
+                            progress[rank] = (sig, now)
+                    last = max([t for _, t in progress.values()]
+                               or [start])
+                    if now - last > stall_timeout:
+                        at = {r: s for r, (s, _) in progress.items()}
+                        stalled = (f"gang stalled: no beacon progress for "
+                                   f"{stall_timeout:.0f}s (last beacons "
+                                   f"{at or 'none written'})")
+                        break
                 time.sleep(0.05)
 
-        if failed or timed_out:
-            _reap(procs)
+        reap_info = {}
+        if failed or timed_out or stalled:
+            reap_info = _reap(procs)
         outputs = []
         for f in files:
             f.seek(0)
             outputs.append(f.read())
-        if failed or timed_out:
-            reason = (f"cluster launch timed out after {timeout:.0f}s"
-                      if timed_out else "cluster worker failed")
+        if failed or timed_out or stalled:
+            reason = stalled or (
+                f"cluster launch timed out after {timeout:.0f}s"
+                if timed_out else "cluster worker failed")
             raise LaunchError(
                 f"{reason} ({nprocs} procs x {devices_per_proc} devices, "
-                f"cmd={list(cmd)!r})",
+                f"cmd={list(cmd)!r}{_reap_tail(reap_info)})",
                 [p.poll() for p in procs], outputs)
     finally:
         _reap(procs)
         for f in files:
             f.close()
+    return outputs
+
+
+def _bind_failure(outputs: Sequence[str]) -> bool:
+    return any(m in out for out in outputs for m in _BIND_MARKERS)
+
+
+def launch(cmd: Sequence[str], nprocs: int, devices_per_proc: int = 1,
+           timeout: float = 900.0, port: Optional[int] = None,
+           extra_env: Optional[dict] = None, echo: bool = False,
+           tuned_env: bool = False, stall_timeout: Optional[float] = None,
+           beacon_dir: Optional[str] = None) -> List[str]:
+    """Run `cmd` (argv after the interpreter, e.g. `["-m",
+    "repro.cluster.worker", ...]`) as `nprocs` coordinated processes.
+
+    Returns the per-process merged stdout/stderr once all exit 0.  On any
+    nonzero exit or timeout, every surviving worker is reaped and a
+    `LaunchError` carries the per-process exit codes, output tails, and
+    any partial CLUSTER_RESULT payloads.  When the coordinator port was
+    auto-assigned (`port=None`) and the failure looks like a lost
+    bind race (`free_port`'s TOCTOU window), the launch retries ONCE on a
+    fresh port after a short backoff.  `tuned_env=True` launches every
+    worker under the tcmalloc/logging host-tuning preset
+    (`_flags.tuned_host_env`; numerics-neutral by construction, marked
+    via REPRO_TUNED_ENV in the worker result).
+    """
+    if nprocs < 1:
+        raise ValueError(f"nprocs must be >= 1, got {nprocs}")
+    try:
+        outputs = _launch_attempt(
+            cmd, nprocs, devices_per_proc, timeout,
+            f"127.0.0.1:{port or free_port()}", extra_env, tuned_env,
+            stall_timeout=stall_timeout, beacon_dir=beacon_dir)
+    except LaunchError as e:
+        if port is not None or not _bind_failure(e.outputs):
+            raise
+        time.sleep(0.5)
+        outputs = _launch_attempt(
+            cmd, nprocs, devices_per_proc, timeout,
+            f"127.0.0.1:{free_port()}", extra_env, tuned_env,
+            stall_timeout=stall_timeout, beacon_dir=beacon_dir)
 
     if echo:
         for i, out in enumerate(outputs):
             for line in out.splitlines():
                 print(f"[p{i}] {line}")
     return outputs
+
+
+def supervised_launch(cmd: Sequence[str], nprocs: int,
+                      devices_per_proc: int = 1, *,
+                      timeout: float = 900.0, stall_timeout: float = 120.0,
+                      max_restarts: int = 2, backoff_s: float = 0.5,
+                      fault: Optional[str] = None,
+                      extra_env: Optional[dict] = None,
+                      tuned_env: bool = False, expect_result: bool = True,
+                      echo: bool = False) -> Tuple[List[str], List[dict]]:
+    """Launch under supervision: beacon-based stall detection plus
+    retry-with-exponential-backoff relaunch of the whole gang under a
+    bounded restart budget.
+
+    The relaunch command never changes: workers self-resume from the
+    newest sha256-VALID epoch in their `--ckpt-dir` (corrupt epochs are
+    skipped — `core.integrity.latest_valid`), so each restart replays at
+    most one checkpoint period and, because chunked execution is
+    bit-identical to unchunked, changes no output bit.
+
+    `fault` (default: the ambient REPRO_FAULT variable) arms the
+    deterministic injection harness (`cluster.faults`) on the FIRST
+    attempt only; recovery attempts always run clean, which is what makes
+    every injected failure a terminating, reproducible test case.
+
+    `expect_result=True` additionally treats a worker that exits 0
+    without emitting its CLUSTER_RESULT line (the drop_result fault, or a
+    real lost report) as a failure to retry.
+
+    Returns `(outputs, attempts)` where `attempts` is the restart history
+    — one dict per FAILED attempt (reason, returncodes, last beacons,
+    backoff applied); empty when the first attempt succeeded.  Raises
+    `LaunchError` carrying the full history once the budget is exhausted.
+    """
+    fault = os.environ.get(faults.ENV_FAULT, "") if fault is None else fault
+    if fault:
+        faults.FaultSpec.parse(fault)      # fail fast on bad grammar
+    attempts: List[dict] = []
+    last: Optional[LaunchError] = None
+    for attempt in range(max_restarts + 1):
+        bdir = tempfile.mkdtemp(prefix=f"repro_beacon_a{attempt}_")
+        env = dict(extra_env or {})
+        env[faults.ENV_BEACON_DIR] = bdir
+        env[faults.ENV_ATTEMPT] = str(attempt)
+        # arm the fault on the first attempt only; explicit "" overrides
+        # any ambient REPRO_FAULT the workers would otherwise inherit
+        env[faults.ENV_FAULT] = fault if attempt == 0 else ""
+        try:
+            outputs = launch(cmd, nprocs, devices_per_proc,
+                             timeout=timeout, extra_env=env, echo=echo,
+                             tuned_env=tuned_env,
+                             stall_timeout=stall_timeout, beacon_dir=bdir)
+            if expect_result:
+                missing = [
+                    i for i, out in enumerate(outputs)
+                    if sum(ln.startswith(RESULT_PREFIX)
+                           for ln in out.splitlines()) != 1]
+                if missing:
+                    raise LaunchError(
+                        f"worker(s) {missing} exited 0 without a "
+                        f"CLUSTER_RESULT line", [0] * nprocs, outputs)
+            return outputs, attempts
+        except LaunchError as e:
+            last = e
+            backoff = backoff_s * (2 ** attempt)
+            attempts.append(dict(
+                index=attempt,
+                reason=str(e).splitlines()[0],
+                returncodes=e.returncodes,
+                beacons=faults.read_beacons(bdir),
+                backoff_s=backoff))
+            if attempt < max_restarts:
+                time.sleep(backoff)
+    raise LaunchError(
+        f"restart budget exhausted after {max_restarts + 1} attempts "
+        f"(max_restarts={max_restarts})",
+        last.returncodes, last.outputs, attempts=attempts)

@@ -35,19 +35,29 @@ def parse_worker_outputs(outputs: Sequence[str]) -> List[dict]:
     return sorted(results, key=lambda r: r["proc"])
 
 
-def summarize_point(results: List[dict]) -> dict:
+def summarize_point(results: List[dict],
+                    attempts: List[dict] = None) -> dict:
     """Fold one launch's per-process results into a scaling row.
 
     Wall time is the max over processes (the job is done when the slowest
     process is); per-phase walls keep both the max and the per-process
-    breakdown.  Raster signatures must agree across processes — each
-    gathered the same global raster."""
+    breakdown.  Raster AND weight signatures must agree across processes
+    — each gathered the same global raster and plastic state.
+
+    `attempts` (from `local.supervised_launch`) attaches the recovery
+    history: the row records how many restarts the point needed, why each
+    attempt died, and what the surviving attempt salvaged from periodic
+    epochs."""
     if not results:
         raise ValueError("no worker results")
     sigs = {r["raster_sig"] for r in results}
     if len(sigs) != 1:
         raise ValueError(f"raster signatures diverge across processes: "
                          f"{[r['raster_sig'] for r in results]}")
+    wsigs = {r["weights_sig"] for r in results if "weights_sig" in r}
+    if len(wsigs) > 1:
+        raise ValueError(f"weight signatures diverge across processes: "
+                         f"{sorted(wsigs)}")
     nprocs = results[0]["nprocs"]
     if len(results) != nprocs or [r["proc"] for r in results] != list(
             range(nprocs)):
@@ -71,6 +81,26 @@ def summarize_point(results: List[dict]) -> dict:
                per_proc=[{k: r[k] for k in
                           ("proc", "wall_s", *PHASE_KEYS) if k in r}
                          for r in results])
+    if wsigs:
+        row["weights_sig"] = next(iter(wsigs))
+    if "ckpt_every" in results[0]:
+        row["ckpt_every"] = results[0]["ckpt_every"]
+        row["n_ckpts"] = max(r.get("n_ckpts", 0) for r in results)
+        row["ckpt_wall_s"] = round(
+            max(r.get("ckpt_wall_s", 0.0) for r in results), 4)
+    # recovery bookkeeping: what the surviving attempt restored, plus the
+    # supervisor's restart history when the launch was supervised
+    restored = [r for r in results if r.get("restored_from")]
+    row["recovery"] = dict(
+        attempt=max((r.get("attempt", 0) for r in results), default=0),
+        restarts=len(attempts or []),
+        restored=bool(restored),
+        restored_t=(restored[0].get("restored_t") if restored else None),
+        recovered_steps=max(
+            (r.get("recovered_steps", 0) for r in results), default=0),
+        attempts=[dict(index=a["index"], reason=a["reason"],
+                       backoff_s=a["backoff_s"])
+                  for a in (attempts or [])])
     if "saturated" in results[0]:
         row["saturated"] = max(r.get("saturated", 0) for r in results)
     for k in PHASE_KEYS:
@@ -93,10 +123,17 @@ def scaling_report(rows: List[dict], config: Dict, name: str =
         raster_sig=sigs[0],
         spikes=rows[0]["spikes"],
         identical_across_procs=(len(set(sigs)) == 1))
+    wsigs = [r["weights_sig"] for r in rows if "weights_sig" in r]
+    if wsigs:
+        deterministic["weights_sig"] = wsigs[0]
+        deterministic["identical_weights_across_procs"] = (
+            len(set(wsigs)) == 1)
     wall = {}
     for r in rows:
         p = r["nprocs"]
         wall[f"p{p}_wall_s"] = r["wall_s"]
+        if r.get("ckpt_wall_s") is not None:
+            wall[f"p{p}_ckpt_wall_s"] = r["ckpt_wall_s"]
         for k in PHASE_KEYS:
             if k in r:
                 wall[f"p{p}_{k}"] = r[k]

@@ -6,12 +6,26 @@ Every process builds the full plan locally (construction is a pure
 function of the config — the paper's reproducible-construction property),
 places its own shards on the process-spanning `cells` mesh, and runs:
 
-  1. the fused engine (`core.StepProgram.run`) — timed end-to-end,
-     raster gathered to every host for the global signature;
+  1. the fused engine (`core.StepProgram.run`) — timed end-to-end in
+     checkpoint-period chunks, raster gathered to every host for the
+     global signature;
   2. optionally a phase-split loop (`StepProgram.time_phases`)
      attributing wall-clock to phase A / exchange / phase B *per
      process* — the paper's Table 2 instrumentation, now across real
      processes, schedule-aware under `--exchange-schedule pipelined`.
+
+Fault tolerance (see `cluster.faults` and DESIGN.md §Fault tolerance):
+with `--ckpt-dir`/`--ckpt-every K`, the worker writes a sha256-verified,
+layout-free epoch every K steps (primary process only; atomic
+tmp+rename) carrying the run's cumulative spike events, and at startup
+SELF-RESUMES from the newest VALID epoch found in the directory — so the
+supervisor (`local.supervised_launch`) relaunches a failed gang with an
+unchanged command line and recovery replays at most one period.  Chunk
+boundaries are aligned to `base_t + k*K` regardless of the resume point,
+and chunked execution is bit-identical to unchunked, so the recovered
+run's final raster AND weight signatures equal the fault-free run's.
+Progress beacons (`REPRO_BEACON_DIR`) and the deterministic fault hooks
+(`REPRO_FAULT`) ride the same chunk boundaries.
 
 The result is one `CLUSTER_RESULT {json}` line on stdout per process;
 `repro.cluster.report` parses and aggregates them in the parent.
@@ -20,9 +34,11 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
+from . import faults
 
 RESULT_PREFIX = "CLUSTER_RESULT "
 
@@ -65,6 +81,13 @@ def add_workload_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint to restore before running (its saved "
                          "t becomes t0)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="directory for periodic epochs; at startup the "
+                         "worker self-resumes from the newest sha256-VALID "
+                         "epoch found here (corrupt epochs skipped)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="periodic checkpoint period K in steps "
+                         "(0 = off; needs --ckpt-dir)")
 
 
 def workload_argv(args) -> list:
@@ -90,24 +113,56 @@ def workload_argv(args) -> list:
             "--phase-steps", str(args.phase_steps)]
     if getattr(args, "ckpt", None):
         argv += ["--ckpt", args.ckpt]
+    if getattr(args, "ckpt_dir", None):
+        argv += ["--ckpt-dir", args.ckpt_dir]
+    if getattr(args, "ckpt_every", 0):
+        argv += ["--ckpt-every", str(args.ckpt_every)]
     return argv
+
+
+def _chunk_spans(t_from: int, t_end: int, k: int, align: int) -> list:
+    """[(a, b)] chunk boundaries for [t_from, t_end), cut at every
+    `align + i*k` (k=0: one chunk).  Alignment to the run BASE rather
+    than the resume point is what makes a resumed run re-enter the exact
+    chunk sequence of the fault-free run — the precondition for the
+    bit-identity argument (chunked == unchunked, any split)."""
+    bs = [t_from]
+    if k > 0:
+        b = align + ((t_from - align) // k + 1) * k
+        while b < t_end:
+            bs.append(b)
+            b += k
+    if bs[-1] != t_end:
+        bs.append(t_end)
+    return [(bs[i], bs[i + 1]) for i in range(len(bs) - 1)
+            if bs[i + 1] > bs[i]]
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.cluster.worker")
     add_workload_args(ap)
     args = ap.parse_args(argv)
+    if args.ckpt_every > 0 and not args.ckpt_dir:
+        raise SystemExit("worker: --ckpt-every needs --ckpt-dir")
+
+    # rank from the launcher env (jax not initialized yet); faults and
+    # beacons key off it before the distributed runtime comes up
+    from .._flags import ENV_PROC_ID
+    rank = int(os.environ.get(ENV_PROC_ID, "0") or 0)
+    attempt = int(os.environ.get(faults.ENV_ATTEMPT, "0") or 0)
+    inj = faults.FaultInjector.from_env(rank)
+    beacon = faults.BeaconWriter.from_env(rank)
+    beacon.write(0, "boot", attempt=attempt)
 
     # join the job BEFORE anything touches jax devices
     from . import runtime
     runtime.ensure_initialized()
 
-    import os
-
     import jax
     import numpy as np
 
-    from ..core import EngineConfig, GridConfig, StepProgram, observables
+    from ..core import (EngineConfig, GridConfig, StepProgram, checkpoint,
+                        observables)
     from ..dist import mesh as dist_mesh
 
     H = args.shards
@@ -129,24 +184,74 @@ def main(argv=None) -> int:
                        connectivity=args.connectivity_mode)
     event = args.delivery == "event"
     sp = StepProgram(cfg, eng, mesh=dist_mesh.make_snn_mesh(H))
-    state, t0 = sp.init_state(), 0
+    state, base_t = sp.init_state(), 0
     if args.ckpt:
-        state, t0 = sp.load(args.ckpt)
+        state, base_t = sp.load(args.ckpt)
+
+    # self-resume: newest VALID periodic epoch wins over the cold start /
+    # the explicit --ckpt base.  Cumulative events ride the epoch so the
+    # FULL-run signature survives the restart.
+    t0, restored_from = base_t, None
+    ev_t = np.zeros((0,), np.int64)
+    ev_g = np.zeros((0,), np.int64)
+    if args.ckpt_dir:
+        newest = checkpoint.latest_valid(args.ckpt_dir)
+        if newest is not None and checkpoint.saved_t(newest) > base_t:
+            state, t0 = sp.load(newest)
+            ev = checkpoint.load_raster_events(newest)
+            if ev is not None:
+                ev_t, ev_g = ev
+            restored_from = newest
+            print(f"[worker {rank}] resumed from {newest} (t={t0}, "
+                  f"{ev_t.shape[0]} events restored)", flush=True)
+    t_end = base_t + args.steps
+    beacon.write(t0, "built")
 
     state_d = sp.place(state)
+    spans = _chunk_spans(t0, t_end, args.ckpt_every, base_t)
 
-    # fused run: warmup (compile), then timed from the same initial state
-    jax.block_until_ready(sp.run(state_d, t0, args.steps)[1])
-    w0 = time.perf_counter()
-    state_f, raster, _ = sp.run(state_d, t0, args.steps)
-    jax.block_until_ready(raster)
-    wall_s = time.perf_counter() - w0
+    # warmup: compile each distinct chunk length once (the runner re-jits
+    # per length, not per t0), so the timed loop measures steady state
+    for n in sorted({b - a for a, b in spans}):
+        jax.block_until_ready(sp.run(state_d, t0, n)[1])
+    beacon.write(t0, "warmup")
 
-    raster_np = runtime.gather(raster)                    # [T, H, N]
     gid_np = np.asarray(sp.plan.gid)
+    cur = state_d
+    wall_s = ckpt_wall_s = 0.0
+    n_ckpts = 0
+    for a, b in spans:
+        beacon.write(a, "chunk")
+        inj.on_chunk(a, b)
+        w0 = time.perf_counter()
+        cur, raster, _ = sp.run(cur, a, b - a)
+        jax.block_until_ready(raster)
+        wall_s += time.perf_counter() - w0
+        # event times are RELATIVE to the run base (t - base_t): a run
+        # restored from --ckpt signs its continuation window exactly like
+        # a single-process run over the same window, and the cumulative
+        # list carried across self-resumes stays in one consistent frame
+        ct, cg = observables.raster_events(runtime.gather(raster), gid_np,
+                                           t0=a - base_t)
+        ev_t = np.concatenate([ev_t, ct])
+        ev_g = np.concatenate([ev_g, cg])
+        if args.ckpt_every > 0:
+            c0 = time.perf_counter()
+            host = runtime.gather(cur)
+            path = os.path.join(args.ckpt_dir, f"ckpt_{b}.npz")
+            if runtime.is_primary():
+                checkpoint.save(path, sp.spec, sp.plan, host, b,
+                                raster_events=(ev_t, ev_g))
+                inj.on_checkpoint_written(path, b)
+            ckpt_wall_s += time.perf_counter() - c0
+            n_ckpts += 1
+
+    beacon.write(t_end, "report")
+    state_host = runtime.gather(cur)
+    T = t_end - base_t
     result = dict(
         proc=runtime.process_index(), nprocs=runtime.process_count(),
-        shards=H, t0=t0, steps=args.steps,
+        shards=H, t0=base_t, steps=args.steps,
         exchange=args.exchange, placement=args.placement,
         exchange_schedule=args.exchange_schedule,
         delivery=args.delivery, profile=args.profile,
@@ -155,12 +260,25 @@ def main(argv=None) -> int:
         tuned_env=os.environ.get("REPRO_TUNED_ENV", "") == "1",
         local_devices=jax.local_device_count(),
         wall_s=round(wall_s, 4),
-        spikes=int(raster_np.sum()),
-        rate_hz=round(observables.mean_rate_hz(raster_np, cfg.n_neurons), 3),
-        raster_sig=observables.raster_signature(raster_np, gid_np).hex())
+        spikes=int(ev_t.shape[0]),
+        rate_hz=round(ev_t.shape[0] / (cfg.n_neurons * T / 1000.0), 3)
+        if T else 0.0,
+        # signature over the FULL run window [base_t, t_end): per-chunk
+        # events concatenate in canonical order, so this equals the
+        # one-shot raster_signature bit-for-bit (observables docstring)
+        raster_sig=observables.events_signature(ev_t, ev_g).hex(),
+        weights_sig=sp.weight_signature(state_host).hex(),
+        # recovery bookkeeping (surfaced by cluster.report)
+        attempt=attempt,
+        ckpt_every=args.ckpt_every, n_ckpts=n_ckpts,
+        ckpt_wall_s=round(ckpt_wall_s, 4),
+        restored_from=restored_from,
+        restored_t=(t0 if restored_from else None),
+        # steps salvaged from periodic epochs instead of recomputed —
+        # the restart replays only [restored_t, failure point)
+        recovered_steps=(t0 - base_t) if restored_from else 0)
     if event:
-        result["saturated"] = int(np.asarray(
-            runtime.gather(state_f.sat)).sum())
+        result["saturated"] = int(np.asarray(state_host.sat).sum())
 
     if args.phase_steps > 0:
         # sp.run never mutates its input state, so state_d re-seeds the
@@ -171,7 +289,8 @@ def main(argv=None) -> int:
         result["phase_steps"] = args.phase_steps
         result.update({k: round(v, 4) for k, v in times.items()})
 
-    print(RESULT_PREFIX + json.dumps(result), flush=True)
+    if inj.emit_result():
+        print(RESULT_PREFIX + json.dumps(result), flush=True)
     return 0
 
 

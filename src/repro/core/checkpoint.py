@@ -7,8 +7,16 @@ the canonical (tgt_gid, src_gid, j) triple.  A run checkpointed at H shards
 restores bit-identically at any H' / placement' (tested in
 tests/test_checkpoint.py) — node-count changes on restart are free.
 
-Writes are crash-safe: tmp file + atomic rename; `latest()` finds the newest
-complete checkpoint, so a kill at any point leaves a loadable state.
+Writes are crash-safe: tmp file + atomic rename with a sha256 payload
+digest embedded (`core.integrity`); `load` verifies the digest and raises
+`CheckpointCorrupt` — never deserializes garbage — on a truncated or
+bit-flipped file.  `latest()` finds the newest complete checkpoint and
+`latest_valid()` the newest that VERIFIES (falling back past corrupted
+epochs), so a kill or disk corruption at any point leaves a loadable
+state.  A checkpoint may optionally carry the run's cumulative spike
+events (`raster_events=`): a supervised cluster run restarted from a
+mid-run epoch recovers the raster-so-far and its final full-run
+signature stays bit-identical to the fault-free run.
 
 Both delivery backends are covered by ONE on-disk format: the event
 backend's ring of per-slot synapse-id lists maps onto the dense backend's
@@ -28,14 +36,14 @@ from __future__ import annotations
 
 import json
 import os
-import tempfile
 from typing import Optional, Tuple
 
 import numpy as np
 
-from . import connectivity, engine, event_engine, profiles
+from . import connectivity, engine, event_engine, integrity, profiles
 from .engine import ShardPlan, ShardState, SimSpec
 from .event_engine import EventState
+from .integrity import CheckpointCorrupt  # noqa: F401  (public re-export)
 
 
 def _global_keys(spec: SimSpec, plan: ShardPlan):
@@ -116,11 +124,17 @@ def _ranks_to_event_ring(ranks: np.ndarray, cap_ev: int):
     return ring, count
 
 
-def save(path: str, spec: SimSpec, plan: ShardPlan, state, t: int) -> str:
+def save(path: str, spec: SimSpec, plan: ShardPlan, state, t: int,
+         raster_events: Optional[Tuple[np.ndarray, np.ndarray]] = None
+         ) -> str:
     """Write a layout-free checkpoint; returns the final path.
 
     `state` is a ShardState (delivery='dense') or an EventState
-    (delivery='event'); the mode is recorded and guarded on load."""
+    (delivery='event'); the mode is recorded and guarded on load.
+    `raster_events=(times, gids)` optionally persists the run's
+    cumulative spike events so a restarted run can reconstruct the
+    full-run raster signature (`load_raster_events` reads them back);
+    events are already layout-free (absolute step, global id)."""
     delivery, sat_total = "dense", 0
     if isinstance(state, EventState):
         delivery = "event"
@@ -157,6 +171,10 @@ def save(path: str, spec: SimSpec, plan: ShardPlan, state, t: int) -> str:
         j=j.reshape(-1)[m][key_order],
         w=syn(state.w), last_arr=syn(state.last_arr), arr_ring=arr,
         t=np.int64(t))
+    if raster_events is not None:
+        ev_t, ev_g = raster_events
+        payload["ev_t"] = np.asarray(ev_t, dtype=np.int64)
+        payload["ev_g"] = np.asarray(ev_g, dtype=np.int64)
     prof = profiles.from_config(spec.cfg)
     meta = dict(grid_x=spec.cfg.grid_x, grid_y=spec.cfg.grid_y,
                 neurons_per_column=spec.cfg.neurons_per_column,
@@ -165,15 +183,14 @@ def save(path: str, spec: SimSpec, plan: ShardPlan, state, t: int) -> str:
                 ring_masses=list(prof.ring_masses()), t=int(t),
                 delivery=delivery, sat=sat_total,
                 connectivity_mode=("streamed" if spec.stream is not None
-                                   else "materialized"))
+                                   else "materialized"),
+                n_events=(0 if raster_events is None
+                          else int(payload["ev_t"].shape[0])))
 
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
-                               suffix=".tmp")
-    with os.fdopen(fd, "wb") as f:
-        np.savez_compressed(f, meta=json.dumps(meta), **payload)
-    os.replace(tmp, path)                          # atomic
-    return path
+    # atomic tmp+rename write with the sha256 payload digest embedded —
+    # load() re-derives it and refuses truncated/bit-flipped files
+    payload["meta"] = np.array(json.dumps(meta))
+    return integrity.write_verified(path, payload)
 
 
 def load(path: str, spec: SimSpec, plan: ShardPlan,
@@ -182,8 +199,11 @@ def load(path: str, spec: SimSpec, plan: ShardPlan,
 
     Returns (ShardState, t) for delivery='dense' and (EventState, t) for
     delivery='event' (then `cap_ev` sizes the rebuilt ring — pass
-    `state.ev_ring.shape[-1]` from `event_engine.build`)."""
-    z = np.load(path, allow_pickle=False)
+    `state.ev_ring.shape[-1]` from `event_engine.build`).
+
+    Raises `CheckpointCorrupt` (never deserializes garbage) when the file
+    is truncated, undecodable, or fails its sha256 payload digest."""
+    z = integrity.read_verified(path)
     meta = json.loads(str(z["meta"]))
     for k, v in (("grid_x", spec.cfg.grid_x), ("grid_y", spec.cfg.grid_y),
                  ("neurons_per_column", spec.cfg.neurons_per_column),
@@ -291,13 +311,30 @@ def load(path: str, spec: SimSpec, plan: ShardPlan,
     return new, int(z["t"])
 
 
+def load_raster_events(path: str
+                       ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """Cumulative (times, gids) spike events saved with the checkpoint,
+    or None when it was written without `raster_events=`.  Verified like
+    `load` (raises `CheckpointCorrupt`)."""
+    z = integrity.read_verified(path)
+    if "ev_t" not in z:
+        return None
+    return z["ev_t"].astype(np.int64), z["ev_g"].astype(np.int64)
+
+
+def saved_t(path: str) -> int:
+    """The step a (verified) checkpoint was taken at."""
+    z = integrity.read_verified(path)
+    return int(json.loads(str(z["meta"]))["t"])
+
+
 def latest(directory: str, prefix: str = "ckpt_") -> Optional[str]:
     """Newest complete checkpoint in `directory` (crash-safe discovery)."""
-    if not os.path.isdir(directory):
-        return None
-    cands = [f for f in os.listdir(directory)
-             if f.startswith(prefix) and f.endswith(".npz")]
-    if not cands:
-        return None
-    step = lambda f: int(f[len(prefix):-4])
-    return os.path.join(directory, max(cands, key=step))
+    steps = integrity.checkpoint_steps(directory, prefix)
+    return steps[-1][1] if steps else None
+
+
+def latest_valid(directory: str, prefix: str = "ckpt_") -> Optional[str]:
+    """Newest checkpoint that passes sha256 verification, falling back
+    past corrupted epochs (the supervisor's restart anchor)."""
+    return integrity.latest_valid(directory, prefix)

@@ -156,6 +156,26 @@ class StepProgram:
         return checkpoint.load(path, self.spec, self.plan,
                                cap_ev=self.cap_ev)
 
+    def weight_signature(self, state) -> bytes:
+        """sha256 over the valid synapse weights in canonical per-shard
+        order — the plastic-state counterpart of the raster signature
+        (comparable across connectivity residency modes: both lay valid
+        weights out in (tgt_gid, src_gid, j) order per shard).  `state`
+        must be host-addressable (gather first on a multi-process mesh).
+        """
+        import hashlib
+        w = np.asarray(state.base.w if hasattr(state, "base") else state.w)
+        h = hashlib.sha256()
+        if self.splan is not None:
+            e_start = np.asarray(self.splan.e_start)   # [H, n_chunks + 1]
+            for hh in range(w.shape[0]):
+                h.update(w[hh, :int(e_start[hh, -1])].tobytes())
+        else:
+            valid = np.asarray(self.plan.syn_valid)
+            for hh in range(w.shape[0]):
+                h.update(w[hh][valid[hh]].tobytes())
+        return h.digest()
+
     # -- run handle ------------------------------------------------------
 
     def run(self, state, t0: int, n_steps: int):

@@ -22,12 +22,13 @@ from .batcher import (BatchGroup, CompiledRound, GroupCaps, ProgramCache,
                       solo_signature)
 from .metrics import ServiceMetrics
 from .queue import SimService
-from .session import (DONE, EVICTED, QUEUED, RUNNING, RasterStream,
+from .session import (DONE, EVICTED, FAILED, QUEUED, RUNNING, RasterStream,
                       TenantRequest, TenantSession)
 
 __all__ = [
     "BatchGroup", "CompiledRound", "GroupCaps", "ProgramCache",
     "build_parts", "measure_caps", "negotiate", "shape_key",
     "solo_signature", "ServiceMetrics", "SimService", "DONE", "EVICTED",
-    "QUEUED", "RUNNING", "RasterStream", "TenantRequest", "TenantSession",
+    "FAILED", "QUEUED", "RUNNING", "RasterStream", "TenantRequest",
+    "TenantSession",
 ]

@@ -21,6 +21,9 @@ class ServiceMetrics:
     evictions: int = 0
     resumes: int = 0
     preemptions: int = 0
+    group_failures: int = 0      # group round executions that raised
+    failure_evictions: int = 0   # tenants evicted+requeued by a failure
+    failed: int = 0              # tenants retired FAILED (cap exceeded)
     rounds: int = 0              # scheduler rounds executed
     group_rounds: int = 0        # round-program launches (one per live group)
     tenant_rounds: int = 0       # tenant-slot rounds advanced

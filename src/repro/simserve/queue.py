@@ -22,6 +22,11 @@ Scheduling policy:
     padding triggers a regroup: occupants are checkpointed + re-queued,
     the group re-forms with grown capacities (rare — `negotiate`'s
     headroom absorbs seed-to-seed variation; counted in metrics).
+  - Graceful degradation: a group whose round execution raises loses the
+    group, not the service — occupants are evicted to their last
+    round-boundary state and re-queued (`_fail_group`); a tenant failing
+    past `max_tenant_failures` retires FAILED.  Other groups and queued
+    tenants are untouched, and survivors' outputs stay bit-identical.
 
 Every tenant's streamed raster signature is bit-identical to the same
 config run solo through `StepProgram` regardless of batch companions,
@@ -41,8 +46,8 @@ from ..core import checkpoint, connectivity, distributed
 from ..core.params import EngineConfig
 from . import batcher
 from .metrics import ServiceMetrics
-from .session import (DONE, EVICTED, QUEUED, RUNNING, TenantRequest,
-                      TenantSession)
+from .session import (DONE, EVICTED, FAILED, QUEUED, RUNNING,
+                      TenantRequest, TenantSession)
 
 
 class SimService:
@@ -51,11 +56,13 @@ class SimService:
     def __init__(self, slots: int = 4, round_steps: int = 20,
                  ckpt_dir: Optional[str] = None,
                  stream_dir: Optional[str] = None,
-                 preempt: bool = True, min_resident_rounds: int = 2):
+                 preempt: bool = True, min_resident_rounds: int = 2,
+                 max_tenant_failures: int = 2):
         self.slots = int(slots)
         self.round_steps = int(round_steps)
         self.preempt = preempt
         self.min_resident_rounds = int(min_resident_rounds)
+        self.max_tenant_failures = int(max_tenant_failures)
         self.cache = batcher.ProgramCache(round_steps)
         self.groups: Dict[batcher.ShapeKey, batcher.BatchGroup] = {}
         self.queue: List[TenantSession] = []
@@ -134,7 +141,11 @@ class SimService:
         self.round_no += 1
         self.metrics.rounds += 1
         for group in live_groups:
-            rasters = group.round()          # [slots, R, H, N]
+            try:
+                rasters = group.round()      # [slots, R, H, N]
+            except Exception as err:         # noqa: BLE001 — degrade, don't die
+                self._fail_group(group, err)
+                continue
             self.metrics.group_rounds += 1
             for b, sess in group.live():
                 take = min(self.round_steps,
@@ -276,6 +287,34 @@ class SimService:
             self.queue.append(sess)
         else:
             sess.status = EVICTED
+
+    def _fail_group(self, group: batcher.BatchGroup, err: Exception) -> None:
+        """Graceful degradation: a group whose round raised loses the
+        group, not the service.  `BatchGroup.round` commits its state
+        only when the compiled program returns, so every slot still holds
+        the tenant's last round-boundary state — exactly what the normal
+        eviction path checkpoints.  Occupants are evicted+requeued (they
+        re-admit into a freshly built group, replaying nothing and
+        changing no output bit); a tenant that keeps failing past
+        `max_tenant_failures` retires FAILED instead of retrying forever.
+        The dead group is dropped (a fresh one forms on re-admission); the
+        compiled round program stays cached — it is shape-keyed, not
+        group-owned, and recompiling it would not change its behavior."""
+        self.metrics.group_failures += 1
+        print(f"[simserve] group {group.key} round failed: {err!r}; "
+              f"evicting {len(group.live())} tenant(s)", flush=True)
+        for b, sess in group.live():
+            sess.failures += 1
+            if sess.failures > self.max_tenant_failures:
+                group.release(b)
+                sess.status = FAILED
+                self.metrics.failed += 1
+                print(f"[simserve] tenant {sess.name!r} FAILED after "
+                      f"{sess.failures} group failures", flush=True)
+                continue
+            self._evict_slot(group, b, requeue=True)
+            self.metrics.failure_evictions += 1
+        self.groups.pop(group.key, None)
 
     def _complete(self, group: batcher.BatchGroup, b: int,
                   sess: TenantSession) -> None:

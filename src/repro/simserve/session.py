@@ -37,6 +37,7 @@ QUEUED = "queued"
 RUNNING = "running"
 EVICTED = "evicted"
 DONE = "done"
+FAILED = "failed"   # terminal: exceeded the service's per-tenant failure cap
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +109,8 @@ class TenantSession:
         self.rounds = 0
         self.evictions = 0
         self.resumes = 0
+        self.failures = 0   # group-execution failures survived (evicted +
+        #                     requeued from the last round boundary)
 
     @property
     def name(self) -> str:
@@ -121,6 +124,7 @@ class TenantSession:
         return dict(name=self.name, status=self.status, t=self.t,
                     n_steps=self.request.n_steps, rounds=self.rounds,
                     evictions=self.evictions, resumes=self.resumes,
+                    failures=self.failures,
                     queue_wait_rounds=self.queue_wait_rounds,
                     n_events=self.stream.n_events,
                     spike_total=self.spike_total,

@@ -1,0 +1,304 @@
+"""Unit coverage for the fault-tolerance layer — everything that does
+not need a live 2-process jax job (that part lives in
+tests/test_cluster_faults.py, probe-gated).
+
+Covered here, jax-free and fast:
+  * `cluster.faults` — injection grammar, injector gating (the
+    irreversible actions are routed through interceptable module
+    globals), progress beacons;
+  * `core.integrity` — digest round-trip, truncation/bit-flip detection,
+    corrupt-tolerant newest-valid discovery;
+  * `cluster.local` — bounded `_reap` escalation, `LaunchError` partial
+    CLUSTER_RESULT payloads, the free_port TOCTOU bind retry, and
+    `supervised_launch`'s restart budget / lost-result detection with
+    trivially failing subprocess commands.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from _mp_helpers import SRC  # noqa: F401  (sys.path bootstrap)
+
+from repro.cluster import faults, local
+from repro.cluster.worker import RESULT_PREFIX, _chunk_spans
+from repro.core import integrity
+
+
+class TestFaultGrammar:
+    def test_parse_and_roundtrip(self):
+        s = faults.FaultSpec.parse("crash@step=30:rank=1")
+        assert (s.kind, s.step, s.rank, s.ms) == ("crash", 30, 1, 0)
+        assert faults.FaultSpec.parse(s.spec()) == s
+        assert faults.FaultSpec.parse("slow@step=10:ms=500").ms == 500
+        assert faults.FaultSpec.parse("drop_result").spec() == "drop_result"
+        assert faults.FaultSpec.parse("corrupt_ckpt@step=20").step == 20
+
+    @pytest.mark.parametrize("bad", [
+        "explode@step=1",        # unknown kind
+        "slow@step=1",           # slow without ms
+        "crash@step=x",          # non-integer value
+        "crash@foo=1",           # unknown key
+        "crash@step",            # missing '='
+    ])
+    def test_bad_specs_name_the_grammar(self, bad):
+        with pytest.raises(ValueError, match="grammar|integer"):
+            faults.FaultSpec.parse(bad)
+
+    def test_from_env(self, monkeypatch):
+        monkeypatch.delenv(faults.ENV_FAULT, raising=False)
+        assert faults.FaultInjector.from_env(0).spec is None
+        monkeypatch.setenv(faults.ENV_FAULT, "crash@step=5")
+        assert faults.FaultInjector.from_env(0).spec.step == 5
+        monkeypatch.setenv(faults.ENV_FAULT, "")   # supervisor's disarm
+        assert faults.FaultInjector.from_env(0).spec is None
+
+
+class TestFaultInjector:
+    @pytest.fixture
+    def exits(self, monkeypatch):
+        fired = []
+        monkeypatch.setattr(faults, "_hard_exit", fired.append)
+        return fired
+
+    def test_crash_fires_on_covering_chunk_and_matching_rank(self, exits):
+        spec = faults.FaultSpec.parse("crash@step=30:rank=1")
+        inj = faults.FaultInjector(spec, rank=1)
+        inj.on_chunk(0, 30)                    # 30 not in [0, 30)
+        assert exits == []
+        inj.on_chunk(30, 40)
+        assert exits == [faults.EXIT_CRASH]
+        other = faults.FaultInjector(spec, rank=0)
+        other.on_chunk(30, 40)                 # wrong rank: no-op
+        assert exits == [faults.EXIT_CRASH]
+
+    def test_disarmed_and_fired_are_noops(self, exits):
+        inj = faults.FaultInjector(None, 0)
+        inj.on_chunk(0, 100)
+        inj.on_checkpoint_written("/nope", 50)
+        assert inj.emit_result() is True and exits == []
+
+    def test_slow_sleeps_once(self, monkeypatch, exits):
+        slept = []
+        monkeypatch.setattr(faults, "_sleep", slept.append)
+        inj = faults.FaultInjector(
+            faults.FaultSpec.parse("slow@step=10:ms=250"), 0)
+        inj.on_chunk(10, 20)
+        inj.on_chunk(20, 30)
+        assert slept == [0.25] and exits == []
+
+    def test_corrupt_ckpt_truncates_then_exits(self, tmp_path, exits):
+        path = str(tmp_path / "ckpt_20.npz")
+        integrity.write_verified(path, {"a": np.arange(4000)})
+        inj = faults.FaultInjector(
+            faults.FaultSpec.parse("corrupt_ckpt@step=20"), 0)
+        inj.on_checkpoint_written(path, 10)    # before step: no-op
+        assert exits == [] and integrity.verify(path)
+        inj.on_checkpoint_written(path, 20)
+        assert exits == [faults.EXIT_CORRUPT]
+        assert not integrity.verify(path)      # the digest catches it
+
+    def test_drop_result_swallows_exactly_once(self, exits):
+        inj = faults.FaultInjector(faults.FaultSpec.parse("drop_result"), 0)
+        assert inj.emit_result() is False
+        assert inj.emit_result() is True       # fired latch
+
+
+class TestBeacons:
+    def test_roundtrip_and_tolerance(self, tmp_path):
+        d = str(tmp_path / "beacons")
+        faults.BeaconWriter(d, 1).write(30, "chunk", attempt=2)
+        faults.BeaconWriter(d, 0).write(40, "report")
+        got = faults.read_beacons(d)
+        assert got[1]["step"] == 30 and got[1]["phase"] == "chunk"
+        assert got[1]["attempt"] == 2 and got[0]["phase"] == "report"
+        # torn/garbage files are skipped, not fatal
+        with open(os.path.join(d, "beacon_9.json"), "w") as f:
+            f.write("{not json")
+        assert 9 not in faults.read_beacons(d)
+        assert faults.read_beacons(None) == {}
+        assert faults.read_beacons(str(tmp_path / "missing")) == {}
+
+    def test_disabled_writer_is_noop(self, tmp_path):
+        faults.BeaconWriter(None, 0).write(1, "x")   # must not raise
+
+
+class TestIntegrity:
+    def test_write_read_roundtrip(self, tmp_path):
+        path = str(tmp_path / "ok.npz")
+        arrays = {"w": np.linspace(0, 1, 100).reshape(10, 10),
+                  "t": np.int64(7)}
+        integrity.write_verified(path, arrays)
+        back = integrity.read_verified(path)
+        assert np.array_equal(back["w"], arrays["w"])
+        assert int(back["t"]) == 7
+        assert integrity.verify(path)
+        assert not any(f.endswith(".tmp") for f in os.listdir(tmp_path))
+
+    def test_truncation_raises_checkpoint_corrupt(self, tmp_path):
+        path = str(tmp_path / "trunc.npz")
+        integrity.write_verified(path, {"a": np.arange(5000)})
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(size * 2 // 3)
+        with pytest.raises(integrity.CheckpointCorrupt) as ei:
+            integrity.read_verified(path)
+        assert ei.value.path == path
+
+    def test_bitflip_raises_checkpoint_corrupt(self, tmp_path):
+        path = str(tmp_path / "flip.npz")
+        integrity.write_verified(path, {"a": np.arange(5000)})
+        blob = bytearray(open(path, "rb").read())
+        blob[len(blob) // 2] ^= 0xFF
+        with open(path, "wb") as f:
+            f.write(bytes(blob))
+        with pytest.raises(integrity.CheckpointCorrupt):
+            integrity.read_verified(path)
+
+    def test_latest_valid_falls_back_past_corruption(self, tmp_path):
+        d = str(tmp_path)
+        for t in (10, 20, 30):
+            integrity.write_verified(os.path.join(d, f"ckpt_{t}.npz"),
+                                     {"t": np.int64(t)})
+        newest = os.path.join(d, "ckpt_30.npz")
+        assert integrity.latest_valid(d) == newest
+        with open(newest, "r+b") as f:            # corrupt the newest epoch
+            f.truncate(os.path.getsize(newest) // 2)
+        assert integrity.latest_valid(d) == os.path.join(d, "ckpt_20.npz")
+        assert integrity.checkpoint_steps(d) == [
+            (10, os.path.join(d, "ckpt_10.npz")),
+            (20, os.path.join(d, "ckpt_20.npz")),
+            (30, newest)]
+        assert integrity.latest_valid(str(tmp_path / "none")) is None
+
+
+class TestChunkSpans:
+    def test_alignment_is_base_relative(self):
+        assert _chunk_spans(0, 40, 10, 0) == [(0, 10), (10, 20), (20, 30),
+                                              (30, 40)]
+        # a resume at an epoch re-enters the same boundary sequence
+        assert _chunk_spans(20, 40, 10, 0) == [(20, 30), (30, 40)]
+        # nonzero base (explicit --ckpt continuation)
+        assert _chunk_spans(15, 35, 10, 15) == [(15, 25), (25, 35)]
+        # ragged tail + k=0 single chunk + empty window
+        assert _chunk_spans(0, 25, 10, 0) == [(0, 10), (10, 20), (20, 25)]
+        assert _chunk_spans(5, 40, 0, 0) == [(5, 40)]
+        assert _chunk_spans(40, 40, 10, 0) == []
+
+
+@pytest.mark.skipif(not local.spawn_supported(),
+                    reason="cannot spawn subprocesses here")
+class TestSupervisorUnits:
+    def test_reap_bounds_total_time_and_logs_sigkill(self):
+        stubborn = ("import signal, time;"
+                    "signal.signal(signal.SIGTERM, signal.SIG_IGN);"
+                    "time.sleep(60)")
+        procs = [subprocess.Popen([sys.executable, "-c", stubborn])
+                 for _ in range(3)]
+        time.sleep(1.0)                       # let the handlers install
+        t0 = time.monotonic()
+        info = local._reap(procs, total_timeout=1.5)
+        elapsed = time.monotonic() - t0
+        assert info["terminated"] == [0, 1, 2]
+        assert info["killed"] == [0, 1, 2]    # SIGTERM ignored everywhere
+        assert elapsed < 10.0                 # one shared grace, not 3x
+        assert all(p.poll() is not None for p in procs)
+
+    def test_reap_gentle_exit_needs_no_sigkill(self):
+        procs = [subprocess.Popen([sys.executable, "-c",
+                                   "import time; time.sleep(60)"])]
+        time.sleep(0.3)
+        info = local._reap(procs, total_timeout=5.0)
+        assert info["terminated"] == [0] and info["killed"] == []
+
+    def test_launch_error_carries_partial_results(self):
+        payload = {"proc": 1, "spikes": 3}
+        outs = [f"noise\n{RESULT_PREFIX}{json.dumps(payload)}\n", "dead"]
+        err = local.LaunchError("boom", [0, 41], outs)
+        assert err.partial_results == {0: payload}
+        assert "partial CLUSTER_RESULT" in str(err)
+
+    def test_bind_failure_retries_once_with_fresh_port(self, monkeypatch):
+        calls = []
+
+        def fake_attempt(cmd, nprocs, devices_per_proc, timeout,
+                         coordinator, extra_env, tuned_env, **kw):
+            calls.append(coordinator)
+            if len(calls) == 1:
+                raise local.LaunchError(
+                    "worker failed", [1],
+                    ["F0809 coordinator Address already in use"])
+            return ["ok"]
+
+        monkeypatch.setattr(local, "_launch_attempt", fake_attempt)
+        monkeypatch.setattr(local.time, "sleep", lambda s: None)
+        assert local.launch(["-c", "pass"], nprocs=1) == ["ok"]
+        assert len(calls) == 2 and calls[0] != calls[1]
+
+    def test_bind_retry_not_taken_for_pinned_port_or_other_failures(
+            self, monkeypatch):
+        def fail(*a, **kw):
+            raise local.LaunchError("worker failed", [1],
+                                    ["Address already in use"])
+        monkeypatch.setattr(local, "_launch_attempt", fail)
+        with pytest.raises(local.LaunchError):
+            local.launch(["-c", "pass"], nprocs=1, port=12345)
+
+        def fail_other(*a, **kw):
+            raise local.LaunchError("worker failed", [1], ["segfault"])
+        monkeypatch.setattr(local, "_launch_attempt", fail_other)
+        with pytest.raises(local.LaunchError):
+            local.launch(["-c", "pass"], nprocs=1)
+
+    def test_budget_exhaustion_raises_with_attempt_history(self):
+        with pytest.raises(local.LaunchError) as ei:
+            local.supervised_launch(["-c", "import sys; sys.exit(3)"],
+                                    nprocs=1, max_restarts=2,
+                                    backoff_s=0.01, timeout=120)
+        err = ei.value
+        assert "restart budget exhausted" in str(err)
+        assert [a["index"] for a in err.attempts] == [0, 1, 2]
+        assert all(a["returncodes"] == [3] for a in err.attempts)
+        backoffs = [a["backoff_s"] for a in err.attempts]
+        assert backoffs == [0.01, 0.02, 0.04]   # exponential
+
+    def test_lost_result_line_is_a_failure_when_expected(self):
+        with pytest.raises(local.LaunchError, match="CLUSTER_RESULT"):
+            local.supervised_launch(["-c", "print('fine')"], nprocs=1,
+                                    max_restarts=0, backoff_s=0.01,
+                                    timeout=120)
+
+    def test_supervised_success_returns_empty_history(self):
+        code = (f"print({RESULT_PREFIX!r} + '{{}}')")
+        outs, attempts = local.supervised_launch(
+            ["-c", code], nprocs=1, max_restarts=1, backoff_s=0.01,
+            timeout=120)
+        assert attempts == [] and RESULT_PREFIX in outs[0]
+
+    def test_supervised_rejects_bad_fault_grammar_fast(self):
+        with pytest.raises(ValueError, match="grammar"):
+            local.supervised_launch(["-c", "pass"], nprocs=1,
+                                    fault="explode@step=1")
+
+    def test_fault_armed_on_first_attempt_only(self, monkeypatch):
+        seen = []
+
+        def fake_launch(cmd, nprocs, devices_per_proc, timeout, port=None,
+                        extra_env=None, echo=False, tuned_env=False,
+                        stall_timeout=None, beacon_dir=None):
+            seen.append(extra_env[faults.ENV_FAULT])
+            if len(seen) == 1:
+                raise local.LaunchError("worker failed", [41], ["dead"])
+            return [RESULT_PREFIX + "{}"]
+
+        monkeypatch.setattr(local, "launch", fake_launch)
+        monkeypatch.setattr(local.time, "sleep", lambda s: None)
+        outs, attempts = local.supervised_launch(
+            ["-c", "x"], nprocs=1, fault="crash@step=5", max_restarts=2)
+        assert seen == ["crash@step=5", ""]    # recovery runs clean
+        assert len(attempts) == 1 and attempts[0]["index"] == 0

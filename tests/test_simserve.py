@@ -16,7 +16,7 @@ import pytest
 from repro.core import distributed, observables
 from repro.core.params import EngineConfig, GridConfig
 from repro.core.step_program import StepProgram
-from repro.simserve import (DONE, RUNNING, RasterStream, SimService,
+from repro.simserve import (DONE, FAILED, RUNNING, RasterStream, SimService,
                             TenantRequest, batcher)
 
 CFG = GridConfig(grid_x=2, grid_y=2, neurons_per_column=20,
@@ -226,3 +226,69 @@ class TestErrors:
         svc.submit(TenantRequest("a", CFG, DENSE, 10))
         with pytest.raises(ValueError):
             svc.evict("a")           # still queued, not running
+
+
+class TestGracefulDegradation:
+    """A group whose round execution raises loses the group, not the
+    service: occupants evict to their last round-boundary checkpoint and
+    requeue (bit-identical continuation); a tenant failing past the cap
+    retires FAILED while everyone else keeps running."""
+
+    def test_transient_group_failure_recovers_bit_identical(self):
+        svc = SimService(slots=2, round_steps=10)
+        cfg_b = dataclasses.replace(CFG, seed=11)
+        a = svc.submit(TenantRequest("a", CFG, DENSE, n_steps=40))
+        b = svc.submit(TenantRequest("b", cfg_b, DENSE, n_steps=40))
+        assert svc.step_round()              # admit both, round 1 clean
+        group = next(iter(svc.groups.values()))
+        real, state = group.prog, {"left": 1}
+
+        def boom(*args, **kw):
+            if state["left"]:
+                state["left"] -= 1
+                raise RuntimeError("injected round failure")
+            return real(*args, **kw)
+
+        group.prog = boom
+        snap = svc.run()
+        assert a.done and b.done
+        assert snap["group_failures"] == 1
+        assert snap["failure_evictions"] == 2
+        assert snap["failed"] == 0
+        assert a.failures == 1 and b.failures == 1
+        assert a.stream.signature() == _solo(CFG, DENSE, 40)[0]
+        assert b.stream.signature() == _solo(cfg_b, DENSE, 40)[0]
+
+    def test_permanent_failure_retires_failed_others_unaffected(self):
+        svc = SimService(slots=2, round_steps=10, max_tenant_failures=2)
+        a = svc.submit(TenantRequest("a", CFG, DENSE, n_steps=40))
+        c = svc.submit(TenantRequest("c", CFG, EVENT, n_steps=40))
+        assert svc.step_round()              # both groups form, round 1 ok
+        dense_group = [g for g in svc.groups.values()
+                       if svc.sessions["a"] in g.sessions][0]
+
+        class Poison:
+            """Delegates everything (metrics snapshots still read
+            .traces) but every round execution raises."""
+            def __init__(self, real):
+                self._real = real
+            def __getattr__(self, k):
+                return getattr(self._real, k)
+            def __call__(self, *args, **kw):
+                raise RuntimeError("permanent failure")
+
+        # poison the live group AND the cached program, so the running
+        # group and every re-formed successor all die
+        poisoned = Poison(svc.cache._programs[dense_group.key])
+        svc.cache._programs[dense_group.key] = poisoned
+        dense_group.prog = poisoned
+        snap = svc.run(max_rounds=50)        # must terminate, not loop
+        assert a.status == FAILED
+        assert a.failures == svc.max_tenant_failures + 1
+        assert snap["failed"] == 1
+        assert snap["group_failures"] == svc.max_tenant_failures + 1
+        assert c.done                        # the event group never noticed
+        assert c.failures == 0
+        assert c.stream.signature() == _solo(CFG, EVENT, 40)[0]
+        # the failed tenant's last good checkpoint survives for forensics
+        assert a.ckpt_path is not None and os.path.exists(a.ckpt_path)
